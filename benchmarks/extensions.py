@@ -1,0 +1,139 @@
+"""Beyond-paper benchmarks: pipelined AMB, quantized gossip, adaptive-T.
+
+Each returns a dict recorded in EXPERIMENTS.md §Perf (beyond-paper half).
+The paper-faithful AMB numbers in paper_figs.py are the baselines.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.core import (BetaSchedule, EngineConfig, ShiftedExponential,
+                        amb_budget_from_fmb, run_amb)
+from repro.core.extensions import (AdaptiveBudget, run_amb_adaptive,
+                                   run_amb_pipelined, run_amb_quantized)
+from repro.core.objectives import LinearRegression
+
+from .paper_figs import _time_to_error
+
+
+def _linreg_setup(n=10, b_global=600, d=256):
+    obj = LinearRegression(dim=d)
+    w_star = jax.random.normal(jax.random.PRNGKey(42), (d,))
+    model = ShiftedExponential(lam=2 / 3, zeta=1.0, b_ref=60)
+    t = amb_budget_from_fmb(model, n, b_global)
+    cfg = EngineConfig(
+        n=n, b_max=4 * (b_global // n), chunk=b_global // n,
+        compute_time=t, comm_time=0.3 * t,
+        fmb_batch_per_node=b_global // n, graph="paper",
+        consensus_rounds=5, beta=BetaSchedule(k=1.0, mu=float(b_global)))
+    eval_fn = lambda w: obj.population_loss(w, w_star)
+    return obj, w_star, model, cfg, eval_fn
+
+
+def ext_pipelined_amb() -> dict:
+    """Overlap consensus with compute (staleness-1): extra samples at zero
+    wall-time cost.  The gain scales with T_c/T (the fraction of the epoch
+    the paper leaves idle): reported for the paper's ratio (0.3) and a
+    comm-heavy cluster (T_c = T), where harvested samples ~ double the
+    batch."""
+    obj, w_star, model, cfg, eval_fn = _linreg_setup()
+    kw = dict(epochs=120, key=jax.random.PRNGKey(0), sample_args=(w_star,),
+              eval_fn=eval_fn, f_star=0.5 * obj.noise_var)
+    h_amb = run_amb(obj, model, cfg, **kw)
+    h_pipe = run_amb_pipelined(obj, model, cfg, **kw)
+
+    # comm-heavy regime: T_c = T
+    import dataclasses
+    cfg_h = dataclasses.replace(cfg, comm_time=cfg.compute_time,
+                                b_max=8 * (600 // cfg.n))
+    h_amb_h = run_amb(obj, model, cfg_h, **kw)
+    h_pipe_h = run_amb_pipelined(obj, model, cfg_h, **kw)
+    lah = np.asarray(h_amb_h.eval_loss)
+    lph = np.asarray(h_pipe_h.eval_loss)
+    mid_h = slice(5, len(lah) // 2)
+    # time-to-target is quantized by epoch boundaries (identical epoch
+    # times), so a loose target ties; compare at a strict target plus the
+    # regime-free metrics: per-epoch loss dominance and regret at equal
+    # wall time.
+    la = np.asarray(h_amb.eval_loss)
+    lp = np.asarray(h_pipe.eval_loss)
+    # target in the *descent* phase (AMB's loss at 1/3 of the run): both
+    # schemes are still improving there, so time-to-target discriminates.
+    target = float(la[len(la) // 3])
+    t_amb = _time_to_error(h_amb, target)
+    t_pipe = _time_to_error(h_pipe, target)
+    mid = slice(5, len(la) // 2)      # pre-floor phase
+    return dict(
+        t_amb=t_amb, t_pipe=t_pipe,
+        # epoch-boundary quantization ties this at 1.0 for the paper's
+        # T_c/T; the per-epoch metrics below are the discriminating ones.
+        speedup_strict_target=t_amb / t_pipe if t_pipe > 0 else float("nan"),
+        batch_amb=float(h_amb.global_batch.mean()),
+        batch_pipe=float(h_pipe.global_batch.mean()),
+        midrun_loss_ratio=float(la[mid].mean() / lp[mid].mean()),
+        epochs_pipe_no_worse=float(np.mean(lp <= la * 1.02)),
+        regret_ratio=float(h_amb.regret[-1] / h_pipe.regret[-1]),
+        final_amb=float(h_amb.eval_loss[-1]),
+        final_pipe=float(h_pipe.eval_loss[-1]),
+        # comm-heavy regime (T_c = T): the harvested window ~doubles samples
+        batch_gain_comm_heavy=float(h_pipe_h.global_batch.mean() /
+                                    h_amb_h.global_batch.mean()),
+        midrun_loss_ratio_comm_heavy=float(lah[mid_h].mean() /
+                                           lph[mid_h].mean()),
+        claim="harvesting comm-window gradients beats paper AMB per-epoch; "
+              "gain scales with T_c/T")
+
+
+def ext_quantized_gossip() -> dict:
+    """8-bit stochastic-quantized gossip: 4x rounds in the same T_c."""
+    obj, w_star, model, cfg, eval_fn = _linreg_setup()
+    kw = dict(epochs=80, key=jax.random.PRNGKey(0), sample_args=(w_star,),
+              eval_fn=eval_fn, f_star=0.5 * obj.noise_var)
+    h_fp = run_amb(obj, model, cfg, **kw)
+    out = {"eps_fp32_r5": float(h_fp.consensus_eps[5:].mean()),
+           "final_fp32": float(h_fp.eval_loss[-1])}
+    for bits in (8, 4):
+        h_q = run_amb_quantized(obj, model, cfg, bits=bits, **kw)
+        out[f"eps_q{bits}_r{int(5 * 32 / bits)}"] = float(
+            h_q.consensus_eps[5:].mean())
+        out[f"final_q{bits}"] = float(h_q.eval_loss[-1])
+    out["eps_reduction_q8"] = out["eps_fp32_r5"] / max(
+        out["eps_q8_r20"], 1e-12)
+    out["claim"] = "same T_c, lower Lemma-1 eps via quantized rounds"
+    return out
+
+
+def ext_adaptive_budget() -> dict:
+    """Non-stationary cluster (3x slowdown at epoch 40): adaptive-T holds
+    the global batch at target; fixed-T collapses to ~1/3."""
+    obj, w_star, model, cfg, eval_fn = _linreg_setup()
+    target = 600
+
+    def model_fn(t):
+        if t <= 40:
+            return ShiftedExponential(lam=2 / 3, zeta=1.0, b_ref=60)
+        return ShiftedExponential(lam=2 / 9, zeta=3.0, b_ref=60)
+
+    ctrl = AdaptiveBudget(b_target=target, ema=0.7)
+    h_ad = run_amb_adaptive(obj, model_fn, cfg, controller=ctrl, epochs=80,
+                            key=jax.random.PRNGKey(0),
+                            sample_args=(w_star,), eval_fn=eval_fn,
+                            f_star=0.5 * obj.noise_var)
+    h_fix_slow = run_amb(obj, model_fn(80), cfg, epochs=40,
+                         key=jax.random.PRNGKey(1), sample_args=(w_star,),
+                         eval_fn=eval_fn, f_star=0.5 * obj.noise_var)
+    return dict(
+        batch_target=target,
+        adaptive_batch_tail=float(h_ad.global_batch[60:].mean()),
+        fixed_batch_after_slowdown=float(h_fix_slow.global_batch.mean()),
+        batch_recovery=float(h_ad.global_batch[60:].mean()) / target,
+        final_adaptive=float(h_ad.eval_loss[-1]),
+        claim="online Lemma-6: batch pinned to target under drift")
+
+
+ALL = {
+    "ext_pipelined_amb": ext_pipelined_amb,
+    "ext_quantized_gossip": ext_quantized_gossip,
+    "ext_adaptive_budget": ext_adaptive_budget,
+}

@@ -1,0 +1,297 @@
+"""Paper-figure benchmarks: each function reproduces one table/figure claim.
+
+All results are returned as dicts (and printed as CSV by run.py) so
+EXPERIMENTS.md can cite them directly.  Wall time is the simulated clock of
+the straggler models (App. I methodology); numerics are real.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (BetaSchedule, EngineConfig, InducedGroups, PauseModel,
+                        ShiftedExponential, amb_budget_from_fmb, run_amb,
+                        run_fmb)
+from repro.core.objectives import LinearRegression, LogisticRegression
+from repro.core.regret import (shifted_exp_asymptotic_ratio,
+                               theorem7_ratio)
+from repro.core.stragglers import amb_batch_sizes, fmb_finish_times
+
+
+def _time_to_error(history, target):
+    """First simulated wall time at which eval loss <= target."""
+    loss = np.asarray(history.eval_loss)
+    wall = np.asarray(history.wall_time)
+    hit = np.nonzero(loss <= target)[0]
+    return float(wall[hit[0]]) if len(hit) else float("inf")
+
+
+def _speedup_run(obj, sample_args, eval_fn, f_star, model, n, b_global,
+                 epochs=120, graph="paper", rounds=5, key=0,
+                 target_frac=0.05, calibrate=False):
+    # Heterogeneous-group models violate Assumption 1 (identical T_i across
+    # nodes); the Lemma-6 closed form then overshoots T.  The paper picks T
+    # empirically in those experiments (App. I.4) — `calibrate` reproduces
+    # that: bisect T so E[b(T)] ~= b_global.
+    if calibrate:
+        from repro.core.stragglers import amb_budget_calibrated
+        t_budget = amb_budget_calibrated(model, n, b_global)
+    else:
+        t_budget = amb_budget_from_fmb(model, n, b_global)
+    cfg = EngineConfig(
+        n=n, b_max=4 * (b_global // n), chunk=b_global // n,
+        compute_time=t_budget, comm_time=0.3 * t_budget,
+        fmb_batch_per_node=b_global // n, graph=graph,
+        consensus_rounds=rounds,
+        beta=BetaSchedule(k=1.0, mu=float(b_global)))
+    kw = dict(epochs=epochs, key=jax.random.PRNGKey(key),
+              sample_args=sample_args, eval_fn=eval_fn, f_star=f_star)
+    h_amb = run_amb(obj, model, cfg, **kw)
+    h_fmb = run_fmb(obj, model, cfg, **kw)
+    l0 = float(h_amb.eval_loss[0])
+    lmin = max(float(h_amb.eval_loss[-1]), float(h_fmb.eval_loss[-1]))
+    target = lmin + target_frac * (l0 - lmin)
+    t_amb = _time_to_error(h_amb, target)
+    t_fmb = _time_to_error(h_fmb, target)
+    return dict(t_amb=t_amb, t_fmb=t_fmb,
+                speedup=t_fmb / t_amb if t_amb > 0 else float("nan"),
+                amb_wall=float(h_amb.wall_time[-1]),
+                fmb_wall=float(h_fmb.wall_time[-1]),
+                mean_b_amb=float(h_amb.global_batch.mean()),
+                final_amb=float(h_amb.eval_loss[-1]),
+                final_fmb=float(h_fmb.eval_loss[-1]))
+
+
+def fig1a_linreg_ec2() -> dict:
+    """Fig. 1(a): linear regression, fully distributed, natural stragglers.
+
+    Paper: AMB ~25-30% faster wall time to equal error on EC2 (n=10).
+    EC2 t2.micro natural variability modelled as shifted exponential.
+    """
+    d = 512                       # paper: 1e5; scaled for CI wall time
+    obj = LinearRegression(dim=d)
+    w_star = jax.random.normal(jax.random.PRNGKey(42), (d,))
+    eval_fn = lambda w: obj.population_loss(w, w_star)
+    model = ShiftedExponential(lam=2 / 3, zeta=1.0, b_ref=600)
+    out = _speedup_run(obj, (w_star,), eval_fn, 0.5 * obj.noise_var,
+                       model, n=10, b_global=600)
+    out["paper_claim"] = "FMB ~1.25x slower (25%) on EC2"
+    return out
+
+
+def fig1b_logreg_ec2() -> dict:
+    """Fig. 1(b): logistic regression (MNIST-like), fully distributed.
+
+    Paper: AMB ~1.7x faster to equal cost."""
+    obj = LogisticRegression(dim=64, num_classes=10)
+    means = obj.make_class_means(jax.random.PRNGKey(3))
+    eval_batch = obj.sample(jax.random.PRNGKey(9), (2048,), means)
+    eval_fn = lambda w: obj.loss(w, eval_batch)
+    f_star = float(eval_fn(_train_logreg_opt(obj, means)))
+    model = ShiftedExponential(lam=2 / 3, zeta=1.0, b_ref=800)
+    out = _speedup_run(obj, (means,), eval_fn, f_star, model,
+                       n=10, b_global=8000, epochs=100)
+    out["paper_claim"] = "AMB ~1.7x faster (Fig 1b)"
+    return out
+
+
+def _train_logreg_opt(obj, means, steps=300):
+    """Near-optimal w for F(w*) reference via full-batch gradient descent."""
+    key = jax.random.PRNGKey(123)
+    batch = obj.sample(key, (4096,), means)
+    w = obj.init_w()
+    for _ in range(steps):
+        w = w - 0.5 * obj.grad(w, batch)
+    return w
+
+
+def fig3_hub_and_spoke() -> dict:
+    """Fig. 3: master-worker (hub-and-spoke) topology, n=20 (19 workers).
+
+    AMB with exact consensus (Remark 1: eps=0 master-worker)."""
+    obj = LogisticRegression(dim=64, num_classes=10)
+    means = obj.make_class_means(jax.random.PRNGKey(5))
+    eval_batch = obj.sample(jax.random.PRNGKey(11), (2048,), means)
+    eval_fn = lambda w: obj.loss(w, eval_batch)
+    f_star = float(eval_fn(_train_logreg_opt(obj, means)))
+    model = ShiftedExponential(lam=2 / 3, zeta=1.0, b_ref=210)
+    n = 19
+    b_global = 19 * 210
+    t_budget = amb_budget_from_fmb(model, n, b_global)
+    cfg = EngineConfig(
+        n=n, b_max=840, chunk=210, compute_time=t_budget,
+        comm_time=0.3 * t_budget, fmb_batch_per_node=210, graph="star",
+        consensus_mode="exact",
+        beta=BetaSchedule(k=1.0, mu=float(b_global)))
+    kw = dict(epochs=80, key=jax.random.PRNGKey(0), sample_args=(means,),
+              eval_fn=eval_fn, f_star=f_star)
+    h_amb = run_amb(obj, model, cfg, **kw)
+    h_fmb = run_fmb(obj, model, cfg, **kw)
+    return dict(amb_wall=float(h_amb.wall_time[-1]),
+                fmb_wall=float(h_fmb.wall_time[-1]),
+                wall_ratio=float(h_fmb.wall_time[-1] / h_amb.wall_time[-1]),
+                final_amb=float(h_amb.eval_loss[-1]),
+                final_fmb=float(h_fmb.eval_loss[-1]),
+                paper_claim="AMB far outperforms FMB in hub-and-spoke")
+
+
+def fig5_consensus_rounds() -> dict:
+    """Fig. 5: effect of imperfect consensus (r=5 vs r=inf).
+
+    Paper: vs epochs, r=5 ~ r=inf; vs wall time AMB >> FMB; AMB reaches
+    1e-3 in <= half FMB's time (2.24x)."""
+    d = 256
+    obj = LinearRegression(dim=d)
+    w_star = jax.random.normal(jax.random.PRNGKey(4), (d,))
+    eval_fn = lambda w: obj.population_loss(w, w_star)
+    model = ShiftedExponential(lam=2 / 3, zeta=1.0, b_ref=600)
+    n, b_global = 20, 2000
+    t_budget = amb_budget_from_fmb(model, n, b_global)
+    base = EngineConfig(
+        n=n, b_max=400, chunk=100, compute_time=t_budget,
+        comm_time=0.3 * t_budget, fmb_batch_per_node=100, graph="ring",
+        beta=BetaSchedule(k=1.0, mu=float(b_global)))
+    out = {}
+    kw = dict(epochs=100, key=jax.random.PRNGKey(0), sample_args=(w_star,),
+              eval_fn=eval_fn, f_star=0.5 * obj.noise_var)
+    for label, mode, r in [("r5", "gossip", 5), ("rinf", "exact", 0)]:
+        cfg = dataclasses.replace(base, consensus_mode=mode,
+                                  consensus_rounds=r or 5)
+        h = run_amb(obj, model, cfg, **kw)
+        out[f"amb_{label}_final"] = float(h.eval_loss[-1])
+        out[f"amb_{label}_eps"] = float(h.consensus_eps.mean())
+    h_fmb = run_fmb(obj, model, dataclasses.replace(
+        base, consensus_mode="gossip"), **kw)
+    out["fmb_final"] = float(h_fmb.eval_loss[-1])
+    out["epoch_equivalence"] = out["amb_r5_final"] / out["amb_rinf_final"]
+    out["paper_claim"] = "r=5 ~= perfect consensus per-epoch (Fig 5a)"
+    return out
+
+
+def fig7_induced_stragglers_ec2() -> dict:
+    """Fig. 6+7: induced background-job stragglers on EC2 (3 bad / 2 mid /
+    5 fast).  Paper: AMB ~2x faster (vs 1.5x with natural stragglers)."""
+    obj = LogisticRegression(dim=64, num_classes=10)
+    means = obj.make_class_means(jax.random.PRNGKey(6))
+    eval_batch = obj.sample(jax.random.PRNGKey(13), (2048,), means)
+    eval_fn = lambda w: obj.loss(w, eval_batch)
+    f_star = float(eval_fn(_train_logreg_opt(obj, means)))
+    model = InducedGroups(group_sizes=(5, 2, 3), zetas=(9.0, 18.0, 27.0),
+                          lams=(1.0, 1.0, 1.0), b_ref=585)
+    out = _speedup_run(obj, (means,), eval_fn, f_star, model,
+                       n=10, b_global=5850, epochs=80, calibrate=True)
+    out["paper_claim"] = "~2x faster with induced stragglers (Fig 7)"
+    # histogram data (Fig 6): batch-size spread across groups
+    from repro.core.stragglers import amb_budget_calibrated
+    times = model.per_gradient_times(jax.random.PRNGKey(1), 10, 4 * 585)
+    t_budget = amb_budget_calibrated(model, 10, 5850)
+    b = np.asarray(amb_batch_sizes(times, t_budget))
+    out["amb_batch_fast_over_bad"] = float(b[:5].mean() / b[7:].mean())
+    return out
+
+
+def fig9_hpc_pause_model() -> dict:
+    """Fig. 8+9: HPC pause-model stragglers, 50 workers in 5 groups.
+
+    Paper: AMB >= 5x faster (2.45s vs 12.7s to min cost)."""
+    obj = LogisticRegression(dim=64, num_classes=10)
+    means = obj.make_class_means(jax.random.PRNGKey(8))
+    eval_batch = obj.sample(jax.random.PRNGKey(15), (2048,), means)
+    eval_fn = lambda w: obj.loss(w, eval_batch)
+    f_star = float(eval_fn(_train_logreg_opt(obj, means)))
+    model = PauseModel(group_sizes=(10,) * 5, mus_ms=(5, 10, 20, 35, 55),
+                       base_ms=1.5, b_ref=10)
+    out = _speedup_run(obj, (means,), eval_fn, f_star, model,
+                       n=50, b_global=500, epochs=80, graph="star",
+                       rounds=1, calibrate=True)
+    out["paper_claim"] = ">5x faster under HPC pause stragglers (Fig 9)"
+    return out
+
+
+def thm7_speedup_vs_n() -> dict:
+    """Thm 7 + App. H: wall-clock speedup grows ~ sqrt(n-1) (bound) and
+    ~ log(n)/(1+lam*zeta) for shifted exponentials."""
+    lam, zeta = 2 / 3, 1.0
+    out = {}
+    for n in (5, 10, 25, 50, 100):
+        model = ShiftedExponential(lam=lam, zeta=zeta, b_ref=60)
+        b_global = 60 * n
+        t_budget = amb_budget_from_fmb(model, n, b_global)
+        s_f = 0.0
+        epochs = 400
+        for s in range(epochs):
+            times = model.per_gradient_times(jax.random.PRNGKey(s), n, 240)
+            s_f += float(fmb_finish_times(times, 60).max())
+        s_a = epochs * t_budget
+        ratio = s_f / s_a
+        out[f"n{n}_measured"] = round(ratio, 3)
+        out[f"n{n}_thm7_bound"] = round(theorem7_ratio(
+            model.mean_batch_time(), model.std_batch_time(), n), 3)
+        out[f"n{n}_logn_asymptote"] = round(
+            shifted_exp_asymptotic_ratio(lam, zeta, n), 3)
+        assert ratio <= out[f"n{n}_thm7_bound"] * 1.02
+    out["paper_claim"] = "S_F <= (1 + sigma/mu sqrt(n-1)) S_A; -> log(n) limit"
+    return out
+
+
+def regret_scaling() -> dict:
+    """Cor. 3/5: regret O(sqrt(m)) — fitted growth exponent ~ 0.5.
+
+    Needs a regime where the noise-driven convergence tail spans the whole
+    horizon (small per-epoch batch, high gradient noise, compact W per the
+    paper's assumptions), otherwise regret accrues in the first few epochs
+    and plateaus (exponent -> 0, trivially within the bound but
+    uninformative).  Iterated: d=512 unconstrained diverged (W must be
+    bounded, as the paper assumes); noise_var=1e-3 converges in ~12 epochs.
+    With noise_var=4, d=64, radius=2 sqrt(d): growth persists to ~epoch 600
+    of 800 and the fitted exponent ~0.38 <= 0.5."""
+    d = 64
+    nv = 4.0
+    obj = LinearRegression(dim=d, noise_var=nv)
+    w_star = jax.random.normal(jax.random.PRNGKey(21), (d,))
+    model = ShiftedExponential(lam=2 / 3, zeta=1.0, b_ref=60)
+    cfg = EngineConfig(
+        n=10, b_max=16, chunk=8, compute_time=amb_budget_from_fmb(
+            model, 10, 60), comm_time=0.3, fmb_batch_per_node=6,
+        graph="paper", consensus_rounds=5,
+        beta=BetaSchedule(k=1.0, mu=60.0),
+        radius=float(2 * np.sqrt(d)))
+    h = run_amb(obj, model, cfg, epochs=800, key=jax.random.PRNGKey(0),
+                sample_args=(w_star,),
+                eval_fn=lambda w: obj.population_loss(w, w_star),
+                f_star=0.5 * nv)
+    m = np.cumsum(np.asarray(h.potential_samples))
+    r = np.asarray(h.regret)
+    # Fit the *growth phase*: once the iterate converges, per-epoch regret
+    # increments vanish and R(m) plateaus (exponent -> 0, trivially
+    # sublinear).  Cor. 3 bounds the growth, so fit up to where R reaches
+    # 90% of its final value, skipping the first few noisy epochs.
+    grow = int(np.searchsorted(r, 0.9 * r[-1]))
+    grow = max(grow, 12)            # guard: keep >= a few fit points
+    lo = max(3, grow // 10)
+    expo = float(np.polyfit(np.log(m[lo:grow + 1]),
+                            np.log(np.maximum(r[lo:grow + 1], 1e-9)), 1)[0])
+    # the whole-run exponent is reported too: plateau => far below 0.5
+    expo_full = float(np.polyfit(np.log(m[lo:]),
+                                 np.log(np.maximum(r[lo:], 1e-9)), 1)[0])
+    return dict(regret_growth_exponent=round(expo, 3),
+                regret_exponent_full_run=round(expo_full, 3),
+                sqrt_m_ratio_final=float(r[-1] / np.sqrt(m[-1])),
+                total_regret=float(r[-1]), total_samples=float(m[-1]),
+                paper_claim="R(tau) = O(sqrt(m)) (Cor. 3)")
+
+
+ALL = {
+    "fig1a_linreg_ec2": fig1a_linreg_ec2,
+    "fig1b_logreg_ec2": fig1b_logreg_ec2,
+    "fig3_hub_and_spoke": fig3_hub_and_spoke,
+    "fig5_consensus_rounds": fig5_consensus_rounds,
+    "fig7_induced_stragglers": fig7_induced_stragglers_ec2,
+    "fig9_hpc_pause_model": fig9_hpc_pause_model,
+    "thm7_speedup_vs_n": thm7_speedup_vs_n,
+    "regret_scaling": regret_scaling,
+}

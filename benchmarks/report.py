@@ -1,0 +1,136 @@
+"""Render EXPERIMENTS.md §Dry-run and §Roofline tables from artifacts.
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.report            # print tables
+    PYTHONPATH=src python -m benchmarks.report --pick     # hillclimb picks
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+from pathlib import Path
+
+DRYRUN_DIR = Path("artifacts/dryrun")
+BASELINE_DIR = Path("artifacts/dryrun_baseline")   # pre-§Perf snapshot
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+ARCH_ORDER = [
+    "qwen3-8b", "qwen3-moe-30b-a3b", "command-r-plus-104b", "internlm2-20b",
+    "zamba2-1.2b", "whisper-base", "rwkv6-3b", "phi3.5-moe-42b-a6.6b",
+    "qwen2-1.5b", "internvl2-76b"]
+
+
+def load(mesh=None) -> list[dict]:
+    recs = []
+    for f in sorted(glob.glob(str(DRYRUN_DIR / "*.json"))):
+        d = json.loads(Path(f).read_text())
+        if mesh is None or d.get("mesh") == mesh:
+            recs.append(d)
+    key = lambda d: (ARCH_ORDER.index(d["arch"]) if d["arch"] in ARCH_ORDER
+                     else 99, SHAPE_ORDER.index(d["shape"]), d["mesh"])
+    return sorted(recs, key=key)
+
+
+def fmt_bytes(b):
+    if b is None:
+        return "-"
+    return f"{b / 2**30:.2f} GiB"
+
+
+def dryrun_table() -> str:
+    rows = ["| arch | shape | mesh | compile | HLO GFLOP/chip | HLO GiB/chip "
+            "| coll GiB/chip | temp GiB/dev |",
+            "|---|---|---|---|---|---|---|---|"]
+    for d in load():
+        rows.append(
+            f"| {d['arch']} | {d['shape']} | {d['mesh']} "
+            f"| {d.get('compile_s', '?')}s "
+            f"| {d['hlo_flops'] / 1e9:.1f} "
+            f"| {d['hlo_bytes'] / 2**30:.2f} "
+            f"| {d['collectives']['traffic_bytes'] / 2**30:.3f} "
+            f"| {fmt_bytes(d.get('temp_size_in_bytes'))} |")
+    return "\n".join(rows)
+
+
+def roofline_table(mesh="16x16") -> str:
+    rows = ["| arch | shape | compute_s | memory_s | collective_s | dominant "
+            "| useful_flops |",
+            "|---|---|---|---|---|---|---|"]
+    for d in load(mesh):
+        rows.append(
+            f"| {d['arch']} | {d['shape']} "
+            f"| {d['compute_s_roofline']:.4g} "
+            f"| {d['memory_s_roofline']:.4g} "
+            f"| {d['collective_s_roofline']:.4g} "
+            f"| **{d['dominant_term']}** "
+            f"| {d['useful_flops_frac']:.3f} |")
+    return "\n".join(rows)
+
+
+def hillclimb_picks(mesh="16x16") -> dict:
+    """The three §Perf picks: worst roofline fraction (useful flops),
+    most collective-bound, most paper-representative (AMB train step with
+    the largest consensus-to-compute ratio)."""
+    recs = load(mesh)
+    worst_frac = min(
+        (d for d in recs if d["useful_flops_frac"] > 0),
+        key=lambda d: d["useful_flops_frac"])
+    coll = max(recs, key=lambda d: (
+        d["collective_s_roofline"] /
+        max(d["compute_s_roofline"], d["memory_s_roofline"], 1e-12)))
+    train = [d for d in recs if d["shape"] == "train_4k"]
+    rep = max(train, key=lambda d: d["collective_s_roofline"])
+    return {"worst_useful_flops": worst_frac, "most_collective_bound": coll,
+            "paper_representative": rep}
+
+
+def before_after_table(mesh="16x16") -> str:
+    """Baseline (paper-faithful pre-optimization snapshot) vs optimized
+    roofline terms, per (arch x shape); the §Perf summary table."""
+    base = {}
+    for f in sorted(glob.glob(str(BASELINE_DIR / "*.json"))):
+        d = json.loads(Path(f).read_text())
+        if d.get("mesh") == mesh:
+            base[(d["arch"], d["shape"])] = d
+    rows = ["| arch | shape | dominant (base -> opt) | binding term s "
+            "(base -> opt) | speedup |",
+            "|---|---|---|---|---|"]
+    for d in load(mesh):
+        b = base.get((d["arch"], d["shape"]))
+        if b is None:
+            continue
+        bind = lambda r: max(r["compute_s_roofline"], r["memory_s_roofline"],
+                             r["collective_s_roofline"])
+        s_b, s_o = bind(b), bind(d)
+        rows.append(
+            f"| {d['arch']} | {d['shape']} "
+            f"| {b['dominant_term']} -> {d['dominant_term']} "
+            f"| {s_b:.4g} -> {s_o:.4g} "
+            f"| **{s_b / max(s_o, 1e-12):.2f}x** |")
+    return "\n".join(rows)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pick", action="store_true")
+    ap.add_argument("--before-after", action="store_true")
+    args = ap.parse_args()
+    if args.before_after:
+        print(before_after_table())
+        return
+    if args.pick:
+        for k, d in hillclimb_picks().items():
+            print(f"{k}: {d['arch']} x {d['shape']} "
+                  f"(dom={d['dominant_term']}, "
+                  f"useful={d['useful_flops_frac']:.3f}, "
+                  f"coll_s={d['collective_s_roofline']:.4g})")
+        return
+    print("### Dry-run matrix\n")
+    print(dryrun_table())
+    print("\n### Roofline (single pod, 16x16)\n")
+    print(roofline_table())
+
+
+if __name__ == "__main__":
+    main()

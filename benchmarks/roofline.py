@@ -1,0 +1,52 @@
+"""Roofline reporting: reads the dry-run artifacts and builds the §Roofline
+table (compute / memory / collective terms, dominant bottleneck, useful-flops
+ratio) per (arch x shape x mesh)."""
+from __future__ import annotations
+
+import glob
+import json
+from pathlib import Path
+
+DRYRUN_DIR = Path("artifacts/dryrun")
+
+
+def load_records(mesh: str = "16x16") -> list[dict]:
+    recs = []
+    for f in sorted(glob.glob(str(DRYRUN_DIR / "*.json"))):
+        d = json.loads(Path(f).read_text())
+        if d.get("mesh") == mesh:
+            recs.append(d)
+    return recs
+
+
+def summarize(mesh: str = "16x16") -> dict:
+    rows = []
+    for d in load_records(mesh):
+        rows.append({
+            "arch": d["arch"], "shape": d["shape"], "mesh": d["mesh"],
+            "compute_s": round(d["compute_s_roofline"], 6),
+            "memory_s": round(d["memory_s_roofline"], 6),
+            "collective_s": round(d["collective_s_roofline"], 6),
+            "dominant_term": d["dominant_term"],
+            "model_flops": d["model_flops"],
+            "hlo_flops_per_chip": d["hlo_flops"],
+            "useful_flops_frac": round(d["useful_flops_frac"], 4),
+            "bytes_per_device": d.get("temp_size_in_bytes"),
+        })
+    return {"mesh": mesh, "rows": rows}
+
+
+def print_table(mesh: str = "16x16") -> None:
+    t = summarize(mesh)
+    hdr = (f"{'arch':24s} {'shape':12s} {'compute_s':>10s} {'memory_s':>10s} "
+           f"{'coll_s':>10s} {'dom':>11s} {'useful':>7s}")
+    print(hdr)
+    print("-" * len(hdr))
+    for r in t["rows"]:
+        print(f"{r['arch']:24s} {r['shape']:12s} {r['compute_s']:10.4f} "
+              f"{r['memory_s']:10.4f} {r['collective_s']:10.4f} "
+              f"{r['dominant_term']:>11s} {r['useful_flops_frac']:7.3f}")
+
+
+if __name__ == "__main__":
+    print_table()

@@ -1,0 +1,52 @@
+"""Benchmark entrypoint: one benchmark per paper table/figure + roofline.
+
+Prints ``name,us_per_call,derived`` CSV rows; full result dicts go to
+``artifacts/bench/<name>.json``.  ``--only <name>`` runs a subset.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--out", default="artifacts/bench")
+    ap.add_argument("--skip-roofline", action="store_true")
+    args = ap.parse_args(argv)
+
+    from . import extensions, paper_figs
+    outdir = Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+
+    benches = dict(paper_figs.ALL)
+    benches.update(extensions.ALL)
+    print("name,us_per_call,derived")
+    for name, fn in benches.items():
+        if args.only and args.only != name:
+            continue
+        t0 = time.time()
+        res = fn()
+        dt = time.time() - t0
+        (outdir / f"{name}.json").write_text(json.dumps(res, indent=2))
+        derived = res.get("speedup") or res.get("wall_ratio") or \
+            res.get("regret_growth_exponent") or \
+            res.get("epoch_equivalence") or res.get("n10_measured") or \
+            res.get("eps_reduction_q8") or res.get("batch_recovery") or \
+            res.get("midrun_loss_ratio") or 0.0
+        print(f"{name},{dt * 1e6:.0f},{derived}", flush=True)
+
+    if not args.skip_roofline and not args.only:
+        from .roofline import summarize
+        table = summarize()
+        (outdir / "roofline.json").write_text(json.dumps(table, indent=2))
+        for rec in table.get("rows", []):
+            print(f"roofline/{rec['arch']}/{rec['shape']},0,"
+                  f"{rec['dominant_term']}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Batched serving example: prefill a batch of prompts, decode new tokens.
+
+Exercises the production serving path (prefill -> DecodeState -> decode_step)
+with a sliding-window variant to show O(window) long-context decode.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import smoke_config
+from repro.models import decode_step, init_params, prefill
+
+
+def main():
+    cfg = dataclasses.replace(smoke_config("qwen3-8b"), sliding_window=32)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    batch_size, prompt_len, new_tokens = 4, 48, 24
+
+    prompts = jax.random.randint(jax.random.PRNGKey(1),
+                                 (batch_size, prompt_len), 0, cfg.vocab_size)
+    prefill_fn = jax.jit(lambda p, b: prefill(p, cfg, b,
+                                              extra_capacity=new_tokens))
+    step_fn = jax.jit(lambda p, st, t: decode_step(p, cfg, st, t))
+
+    t0 = time.time()
+    logits, state = prefill_fn(params, {"tokens": prompts})
+    logits.block_until_ready()
+    print(f"prefill {batch_size}x{prompt_len} in {time.time() - t0:.2f}s "
+          f"(ring cache width {cfg.sliding_window} — O(window) memory)")
+
+    tok = jnp.argmax(logits, axis=-1)
+    generated = [tok]
+    t0 = time.time()
+    for _ in range(new_tokens - 1):
+        logits, state = step_fn(params, state, tok)
+        tok = jnp.argmax(logits, axis=-1)
+        generated.append(tok)
+    tok.block_until_ready()
+    dt = time.time() - t0
+    print(f"decoded {new_tokens} rounds x {batch_size} requests in {dt:.2f}s"
+          f" ({new_tokens * batch_size / dt:.0f} tok/s on CPU)")
+    gen = jnp.stack(generated, axis=1)
+    for i in range(batch_size):
+        print(f"request {i}: {gen[i][:12].tolist()} ...")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,85 @@
+"""Minimal pytree checkpointing: npz arrays + JSON manifest (no orbax here).
+
+Layout:  <dir>/step_<n>/arrays.npz + manifest.json.  Leaves are addressed by
+their joined pytree path; bfloat16 round-trips via a uint16 view (npz has no
+native bf16).  Atomic via write-to-temp + rename.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+from pathlib import Path
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_BF16 = "bfloat16"
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        parts.append(str(getattr(k, "key", getattr(k, "idx", k))))
+    return "/".join(parts)
+
+
+def save_checkpoint(directory: str | os.PathLike, step: int, tree: Any) -> Path:
+    directory = Path(directory)
+    directory.mkdir(parents=True, exist_ok=True)
+    leaves = {}
+    manifest = {"step": step, "leaves": {}}
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    for path, leaf in flat:
+        key = _path_str(path)
+        arr = np.asarray(jax.device_get(leaf))
+        if arr.dtype == jnp.bfloat16:
+            manifest["leaves"][key] = _BF16
+            arr = arr.view(np.uint16)
+        else:
+            manifest["leaves"][key] = str(arr.dtype)
+        leaves[key] = arr
+
+    tmp = Path(tempfile.mkdtemp(dir=directory, prefix=".tmp_ckpt_"))
+    try:
+        np.savez(tmp / "arrays.npz", **leaves)
+        (tmp / "manifest.json").write_text(json.dumps(manifest))
+        final = directory / f"step_{step:08d}"
+        if final.exists():
+            shutil.rmtree(final)
+        tmp.rename(final)
+        return final
+    except Exception:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+
+
+def latest_step(directory: str | os.PathLike) -> Optional[int]:
+    directory = Path(directory)
+    if not directory.exists():
+        return None
+    steps = [int(p.name.split("_")[1]) for p in directory.glob("step_*")]
+    return max(steps) if steps else None
+
+
+def load_checkpoint(directory: str | os.PathLike, step: int,
+                    like: Any) -> Any:
+    """Restore into the structure of ``like`` (an example pytree)."""
+    d = Path(directory) / f"step_{step:08d}"
+    manifest = json.loads((d / "manifest.json").read_text())
+    data = np.load(d / "arrays.npz")
+
+    def restore(path, leaf):
+        key = _path_str(path)
+        arr = data[key]
+        if manifest["leaves"][key] == _BF16:
+            arr = arr.view(jnp.bfloat16)
+        out = jnp.asarray(arr)
+        if out.shape != leaf.shape:
+            raise ValueError(f"{key}: shape {out.shape} != {leaf.shape}")
+        return out
+
+    return jax.tree_util.tree_map_with_path(restore, like)

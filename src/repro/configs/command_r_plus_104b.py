@@ -1,0 +1,16 @@
+"""Command R+ 104B [hf:CohereForAI/c4ai-command-r-v01] — dense GQA, no bias."""
+from ..models.common import ArchConfig
+
+FULL = ArchConfig(
+    name="command-r-plus-104b", family="dense", num_layers=64, d_model=12288,
+    num_heads=96, num_kv_heads=8, head_dim=128, d_ff=33792,
+    vocab_size=256000,
+    # (512, 1024) flash chunking: (1024, 1024) regressed the train_4k
+    # collective term for this arch (see EXPERIMENTS.md §Perf cross-arch
+    # sweep) — chunk/seq-shard alignment is arch-dependent.
+    q_chunk=512, kv_chunk=1024)
+
+SMOKE = ArchConfig(
+    name="command-r-plus-104b-smoke", family="dense", num_layers=2,
+    d_model=256, num_heads=8, num_kv_heads=2, head_dim=32, d_ff=512,
+    vocab_size=512, q_chunk=64, kv_chunk=64)

@@ -1,0 +1,16 @@
+"""InternLM2-20B [arXiv:2403.17297] — dense GQA kv=8."""
+from ..models.common import ArchConfig
+
+FULL = ArchConfig(
+    name="internlm2-20b", family="dense", num_layers=48, d_model=6144,
+    num_heads=48, num_kv_heads=8, head_dim=128, d_ff=16384,
+    vocab_size=92544,
+    # (512, 1024) flash chunking: (1024, 1024) regressed the train_4k
+    # collective term for this arch (see EXPERIMENTS.md §Perf cross-arch
+    # sweep) — chunk/seq-shard alignment is arch-dependent.
+    q_chunk=512, kv_chunk=1024)
+
+SMOKE = ArchConfig(
+    name="internlm2-20b-smoke", family="dense", num_layers=2, d_model=256,
+    num_heads=8, num_kv_heads=2, head_dim=32, d_ff=512, vocab_size=512,
+    q_chunk=64, kv_chunk=64)

@@ -1,0 +1,19 @@
+"""InternVL2-76B [arXiv:2404.16821] — InternViT STUBBED; InternLM2-76B backbone.
+
+``input_specs`` provides pre-projected patch+token embeddings (B, S, d);
+this config covers the language/decoder transformer that consumes them."""
+from ..models.common import ArchConfig
+
+FULL = ArchConfig(
+    name="internvl2-76b", family="vlm", num_layers=80, d_model=8192,
+    num_heads=64, num_kv_heads=8, head_dim=128, d_ff=28672,
+    vocab_size=128256, input_mode="embeds",
+    # (512, 1024) flash chunking: (1024, 1024) regressed the train_4k
+    # collective term for this arch (see EXPERIMENTS.md §Perf cross-arch
+    # sweep) — chunk/seq-shard alignment is arch-dependent.
+    q_chunk=512, kv_chunk=1024)
+
+SMOKE = ArchConfig(
+    name="internvl2-76b-smoke", family="vlm", num_layers=2, d_model=128,
+    num_heads=4, num_kv_heads=2, head_dim=32, d_ff=256, vocab_size=512,
+    input_mode="embeds", q_chunk=64, kv_chunk=64)

@@ -1,0 +1,14 @@
+"""RWKV6 "Finch" 3B [arXiv:2404.05892] — attention-free, data-dependent decay."""
+from ..models.common import ArchConfig
+
+FULL = ArchConfig(
+    name="rwkv6-3b", family="ssm", num_layers=32, d_model=2560,
+    num_heads=40, num_kv_heads=40, head_dim=64, d_ff=8960, vocab_size=65536,
+    # 40 heads don't divide the 16-way model axis (2.5 heads/chip forces
+    # per-token state all-gathers at head boundaries); pad to 48 = 3/chip.
+    head_pad_to=48)
+
+SMOKE = ArchConfig(
+    name="rwkv6-3b-smoke", family="ssm", num_layers=2, d_model=128,
+    num_heads=2, num_kv_heads=2, head_dim=64, d_ff=256, vocab_size=512,
+    q_chunk=64, kv_chunk=64)

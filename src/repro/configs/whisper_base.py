@@ -1,0 +1,19 @@
+"""Whisper-base [arXiv:2212.04356] — enc-dec; mel/conv frontend STUBBED.
+
+``input_specs`` provides precomputed 1500-frame encoder embeddings; this
+config covers the transformer backbone (6L encoder + 6L decoder)."""
+from ..models.common import ArchConfig
+
+FULL = ArchConfig(
+    name="whisper-base", family="audio", num_layers=6, d_model=512,
+    num_heads=8, num_kv_heads=8, head_dim=64, d_ff=2048, vocab_size=51865, vocab_pad_to=51968,
+    encoder_layers=6, encoder_seq=1500,
+    # (512, 1024) flash chunking: (1024, 1024) regressed the train_4k
+    # collective term for this arch (see EXPERIMENTS.md §Perf cross-arch
+    # sweep) — chunk/seq-shard alignment is arch-dependent.
+    q_chunk=512, kv_chunk=1024)
+
+SMOKE = ArchConfig(
+    name="whisper-base-smoke", family="audio", num_layers=2, d_model=128,
+    num_heads=4, num_kv_heads=4, head_dim=32, d_ff=256, vocab_size=512,
+    encoder_layers=2, encoder_seq=32, q_chunk=64, kv_chunk=64)

@@ -1,0 +1,31 @@
+"""Anytime Minibatch (AMB) core — the paper's contribution as composable JAX.
+
+Public API:
+
+  * :mod:`repro.core.consensus` — graphs, doubly-stochastic P, gossip.
+  * :mod:`repro.core.dual_averaging` — dual averaging prox + beta schedules.
+  * :mod:`repro.core.stragglers` — compute-time models (shifted exponential,
+    induced EC2 stragglers, HPC pause model).
+  * :mod:`repro.core.engine` — AMB + FMB multi-node epoch engines.
+  * :mod:`repro.core.objectives` — the paper's convex workloads.
+  * :mod:`repro.core.regret` — closed-form bounds (Thm 2/4/7, App. H).
+  * :mod:`repro.core.extensions` — beyond-paper: pipelined AMB, quantized
+    gossip, adaptive compute budget.
+"""
+from . import (consensus, dual_averaging, engine, extensions, objectives,
+               regret, stragglers)
+from .dual_averaging import BetaSchedule, DualAveraging, prox_step, prox_step_tree
+from .engine import EngineConfig, History, run, run_amb, run_fmb
+from .stragglers import (Deterministic, InducedGroups, PauseModel,
+                         ShiftedExponential, amb_batch_sizes,
+                         amb_budget_calibrated, amb_budget_from_fmb,
+                         fmb_finish_times)
+
+__all__ = [
+    "consensus", "dual_averaging", "engine", "objectives", "regret",
+    "stragglers", "BetaSchedule", "DualAveraging", "prox_step",
+    "prox_step_tree", "EngineConfig", "History", "run", "run_amb", "run_fmb",
+    "Deterministic", "InducedGroups", "PauseModel", "ShiftedExponential",
+    "amb_batch_sizes", "amb_budget_calibrated", "amb_budget_from_fmb",
+    "fmb_finish_times",
+]

@@ -1,0 +1,259 @@
+"""Averaging consensus over a communication graph (paper §3, Lemma 1).
+
+The paper's consensus phase runs ``r_i(t)`` synchronous rounds of
+
+    m_i^(k) = sum_j P_{i,j} m_j^(k-1)
+
+with ``P`` a positive semi-definite doubly-stochastic matrix consistent with
+the (connected, undirected) graph ``G``.  This module provides:
+
+  * graph constructors (ring, 2-D torus, complete, star/hub-and-spoke,
+    Erdos-Renyi, and a 10-node "paper" graph with the same spectral gap the
+    paper reports for its Fig. 2 topology),
+  * Metropolis-Hastings and lazy-Metropolis doubly-stochastic weight matrices,
+  * exact per-node-round gossip (vectorised over all nodes),
+  * the Lemma-1 lower bound on the number of rounds for epsilon-accuracy.
+
+Everything is pure numpy/JAX so it runs identically inside jit'd simulators.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Graph construction
+# ---------------------------------------------------------------------------
+
+def ring_graph(n: int) -> np.ndarray:
+    """Adjacency of an n-cycle."""
+    if n < 2:
+        raise ValueError("ring needs n >= 2")
+    a = np.zeros((n, n), dtype=bool)
+    idx = np.arange(n)
+    a[idx, (idx + 1) % n] = True
+    a[(idx + 1) % n, idx] = True
+    return a
+
+
+def torus_graph(rows: int, cols: int) -> np.ndarray:
+    """Adjacency of a rows x cols 2-D torus (the TPU ICI topology)."""
+    n = rows * cols
+    a = np.zeros((n, n), dtype=bool)
+
+    def nid(r, c):
+        return (r % rows) * cols + (c % cols)
+
+    for r in range(rows):
+        for c in range(cols):
+            i = nid(r, c)
+            for (dr, dc) in ((0, 1), (1, 0)):
+                j = nid(r + dr, c + dc)
+                if i != j:
+                    a[i, j] = a[j, i] = True
+    return a
+
+
+def complete_graph(n: int) -> np.ndarray:
+    a = np.ones((n, n), dtype=bool)
+    np.fill_diagonal(a, False)
+    return a
+
+
+def star_graph(n: int) -> np.ndarray:
+    """Hub-and-spoke: node 0 is the master (paper App. A hub-and-spoke)."""
+    a = np.zeros((n, n), dtype=bool)
+    a[0, 1:] = True
+    a[1:, 0] = True
+    return a
+
+
+def erdos_renyi_graph(n: int, p: float, seed: int = 0) -> np.ndarray:
+    """Connected Erdos-Renyi graph (retries until connected)."""
+    rng = np.random.default_rng(seed)
+    for _ in range(1000):
+        u = rng.random((n, n))
+        a = np.triu(u < p, k=1)
+        a = a | a.T
+        if is_connected(a):
+            return a
+    raise RuntimeError("could not sample a connected G(n,p); raise p")
+
+
+PAPER_GRAPH_LAZY = 0.3
+
+
+def paper_graph() -> np.ndarray:
+    """A 10-node connected graph whose Metropolis P has lambda_2 = 0.888.
+
+    The paper (App. I.1) reports lambda_2(P) = 0.888 for its Fig. 2 topology
+    but does not list the edges.  We use a ring plus chords (0,4) and (2,6):
+    with lazy = PAPER_GRAPH_LAZY Metropolis weights this gives
+    lambda_2 = 0.8883 — the spectral gap is the only property Lemma 1 and
+    the experiments depend on.
+    """
+    a = ring_graph(10)
+    for (i, j) in ((0, 4), (2, 6)):
+        a[i, j] = a[j, i] = True
+    return a
+
+
+def is_connected(adj: np.ndarray) -> bool:
+    n = adj.shape[0]
+    seen = np.zeros(n, dtype=bool)
+    stack = [0]
+    seen[0] = True
+    while stack:
+        i = stack.pop()
+        for j in np.nonzero(adj[i])[0]:
+            if not seen[j]:
+                seen[j] = True
+                stack.append(int(j))
+    return bool(seen.all())
+
+
+GRAPHS = {
+    "ring": ring_graph,
+    "complete": complete_graph,
+    "star": star_graph,
+    "paper": lambda n=10: paper_graph(),
+}
+
+
+def build_graph(name: str, n: int, **kw) -> np.ndarray:
+    if name == "paper":
+        if n != 10:
+            raise ValueError("paper graph is 10 nodes")
+        return paper_graph()
+    if name == "torus":
+        rows = kw.get("rows")
+        if rows is None:
+            rows = int(np.sqrt(n))
+            while n % rows:
+                rows -= 1
+        return torus_graph(rows, n // rows)
+    if name == "erdos_renyi":
+        return erdos_renyi_graph(n, kw.get("p", 0.4), kw.get("seed", 0))
+    if name in GRAPHS:
+        return GRAPHS[name](n)
+    raise ValueError(f"unknown graph {name!r}")
+
+
+# ---------------------------------------------------------------------------
+# Doubly-stochastic weights
+# ---------------------------------------------------------------------------
+
+def metropolis_weights(adj: np.ndarray, lazy: float = 0.5) -> np.ndarray:
+    """Lazy Metropolis-Hastings weights.
+
+    P_{ij} = 1 / (1 + max(deg_i, deg_j)) for (i,j) in E; diagonal soaks the
+    rest.  The result is symmetric doubly stochastic and, mixed with
+    ``lazy`` * I, positive semi-definite (paper requires PSD P).
+    """
+    adj = np.asarray(adj, dtype=bool)
+    n = adj.shape[0]
+    deg = adj.sum(1)
+    p = np.zeros((n, n), dtype=np.float64)
+    ii, jj = np.nonzero(adj)
+    p[ii, jj] = 1.0 / (1.0 + np.maximum(deg[ii], deg[jj]))
+    np.fill_diagonal(p, 0.0)
+    np.fill_diagonal(p, 1.0 - p.sum(1))
+    if lazy > 0.0:
+        p = lazy * np.eye(n) + (1.0 - lazy) * p
+    return p
+
+
+def lambda2(p: np.ndarray) -> float:
+    """Second-largest eigenvalue magnitude of a symmetric stochastic matrix."""
+    ev = np.linalg.eigvalsh(p)
+    return float(np.sort(np.abs(ev))[-2])
+
+
+def spectral_gap(p: np.ndarray) -> float:
+    return 1.0 - lambda2(p)
+
+
+def lemma1_rounds(n: int, lip_l: float, eps: float, p: np.ndarray) -> int:
+    """Paper Lemma 1: rounds needed for additive consensus accuracy eps."""
+    if eps <= 0:
+        raise ValueError("eps must be positive")
+    gap = spectral_gap(p)
+    return int(np.ceil(np.log(2.0 * np.sqrt(n) * (1.0 + 2.0 * lip_l / eps)) / gap))
+
+
+# ---------------------------------------------------------------------------
+# Gossip execution
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ConsensusSpec:
+    """Static description of the consensus phase."""
+
+    p: np.ndarray                  # (n, n) doubly-stochastic
+    rounds: int                    # max rounds r_max
+
+    def __post_init__(self):
+        p = np.asarray(self.p)
+        if not np.allclose(p.sum(0), 1.0, atol=1e-8) or not np.allclose(
+            p.sum(1), 1.0, atol=1e-8
+        ):
+            raise ValueError("P must be doubly stochastic")
+        if (p < -1e-12).any():
+            raise ValueError("P must be non-negative")
+
+
+def gossip(messages: Array, p: Array, rounds: Array | int,
+           max_rounds: int | None = None) -> Array:
+    """Run averaging consensus.
+
+    Args:
+      messages: (n, ...) per-node message tensors m_i^(0).
+      p: (n, n) doubly-stochastic matrix.
+      rounds: scalar int, or (n,) per-node round counts r_i(t) (paper lets the
+        number of completed rounds vary across nodes within a fixed T_c).
+      max_rounds: static upper bound when ``rounds`` is per-node / traced.
+
+    Returns:
+      (n, ...) per-node consensus outputs m_i^(r_i).
+    """
+    messages = jnp.asarray(messages)
+    p = jnp.asarray(p, dtype=messages.dtype)
+    flat = messages.reshape(messages.shape[0], -1)
+
+    if isinstance(rounds, int) and max_rounds is None:
+        def body(_, m):
+            return p @ m
+        out = jax.lax.fori_loop(0, rounds, body, flat)
+        return out.reshape(messages.shape)
+
+    rounds = jnp.asarray(rounds)
+    r_max = int(max_rounds if max_rounds is not None else rounds.max())
+    per_node = jnp.broadcast_to(rounds, (messages.shape[0],))
+
+    def body(k, m):
+        nxt = p @ m
+        keep = (per_node > k)[:, None]
+        return jnp.where(keep, nxt, m)
+
+    out = jax.lax.fori_loop(0, r_max, body, flat)
+    return out.reshape(messages.shape)
+
+
+def exact_average(messages: Array) -> Array:
+    """The r -> infinity limit: every node holds the global mean."""
+    mean = jnp.mean(messages, axis=0, keepdims=True)
+    return jnp.broadcast_to(mean, messages.shape)
+
+
+def consensus_error(messages: Array) -> Array:
+    """Max_i ||m_i - mean|| — the epsilon of Lemma 1 for these messages."""
+    flat = messages.reshape(messages.shape[0], -1)
+    mean = flat.mean(0, keepdims=True)
+    return jnp.max(jnp.linalg.norm(flat - mean, axis=-1))

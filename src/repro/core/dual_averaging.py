@@ -1,0 +1,75 @@
+"""Dual averaging (Nesterov 2009; Xiao 2010) — the paper's optimization core.
+
+Primal update (paper eq. 7):
+
+    w(t+1) = argmin_{w in W} { <w, z(t+1)> + beta(t+1) h(w) }
+
+with ``h`` 1-strongly convex and ``beta(t)`` positive non-decreasing.  We use
+the paper's Euclidean choice ``h(w) = ||w||^2`` (so h is 2-strongly convex; the
+constant only rescales beta) over either W = R^d or an L2 ball of radius R,
+for which the argmin is closed-form:
+
+    w = -z / (2 beta)                (unconstrained)
+    w = Pi_{||w||<=R} (-z / (2 beta))  (ball)
+
+``beta(t) = K + sqrt(t / mu)`` per Lemma 8 (K = gradient-Lipschitz constant,
+mu = expected per-epoch global batch).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+PyTree = object
+
+
+@dataclasses.dataclass(frozen=True)
+class BetaSchedule:
+    """beta(t) = k + sqrt(t / mu) * scale; non-decreasing in t (t >= 1)."""
+
+    k: float = 1.0
+    mu: float = 1.0
+    scale: float = 1.0
+
+    def __call__(self, t: Array | int) -> Array:
+        t = jnp.asarray(t, dtype=jnp.float32)
+        return self.k + self.scale * jnp.sqrt(t / self.mu)
+
+
+def prox_step(z: Array, beta: Array, radius: Optional[float] = None) -> Array:
+    """argmin_w <w,z> + beta ||w||^2 (optionally over the ball ||w|| <= radius)."""
+    w = -z / (2.0 * beta)
+    if radius is not None:
+        nrm = jnp.linalg.norm(w.reshape(-1))
+        w = w * jnp.minimum(1.0, radius / jnp.maximum(nrm, 1e-30))
+    return w
+
+
+def prox_step_tree(z: PyTree, beta: Array, radius: Optional[float] = None) -> PyTree:
+    """Pytree version; the ball constraint is applied per-leaf."""
+    return jax.tree.map(lambda zl: prox_step(zl, beta, radius), z)
+
+
+@dataclasses.dataclass(frozen=True)
+class DualAveraging:
+    """Single-machine dual averaging (used per-node and as the FMB/AMB update)."""
+
+    beta: BetaSchedule = BetaSchedule()
+    radius: Optional[float] = None
+
+    def init_primal(self, like: Array) -> Array:
+        # w(1) = argmin h(w) = 0 (paper eq. 2).
+        return jnp.zeros_like(like)
+
+    def init_dual(self, like: Array) -> Array:
+        return jnp.zeros_like(like)
+
+    def update(self, z: Array, g: Array, t: Array | int) -> tuple[Array, Array]:
+        """z(t+1) = z(t) + g(t); w(t+1) = prox(z(t+1), beta(t+1))."""
+        z_new = z + g
+        w_new = prox_step(z_new, self.beta(jnp.asarray(t) + 1), self.radius)
+        return z_new, w_new

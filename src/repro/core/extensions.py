@@ -1,0 +1,378 @@
+"""Beyond-paper AMB extensions (recorded separately in EXPERIMENTS.md §Perf).
+
+The paper fixes the protocol: compute for T, gossip for T_c, dual-averaging
+update.  Three orthogonal improvements that keep the paper's analysis shape
+(weighted consensus on dual variables) but move the wall-clock/regret
+frontier:
+
+1. **Pipelined AMB** (``run_amb_pipelined``) — the paper *counts* the
+   gradients a node could compute during the consensus window as undone work
+   ``a_i(t)`` (it charges them to regret, then throws them away).  We instead
+   *harvest* them: during T_c each node keeps computing gradients at its
+   current iterate ``w_i(t)`` and contributes them to the *next* epoch's
+   weighted consensus as one-step-stale gradients.  Per-epoch sample count
+   becomes ``b_i(t) + a_i(t-1)`` at zero extra wall time.  This is the
+   classic delayed-gradient trick (Dekel et al. 2012 §4; staleness 1), and
+   dual averaging is robust to it: the extra regret term is
+   O(K * sum_t ||w(t) - w(t-1)||) = O(sqrt(m)) — same order as the bound.
+
+2. **Quantized gossip** (``run_amb_quantized``) — consensus rounds under a
+   fixed T_c are limited by message *bytes* on a slow fabric.  Stochastic
+   uniform quantization to ``bits`` bits lets (32/bits)x more rounds in the
+   same window; the quantization noise is unbiased and its variance decays
+   with the shrinking dynamic range as consensus converges.  Net effect:
+   lower consensus error eps at equal communication time, i.e. a smaller
+   Lemma-1 epsilon term in Theorem 2's regret bound.
+
+3. **Adaptive compute budget** (``adaptive_budget_controller``) — the paper
+   fixes T from an *offline* estimate of mu (Lemma 6).  On a real cluster mu
+   drifts (the paper itself observes EC2 transients, §6.2).  A per-epoch
+   controller tracks the observed aggregate gradient rate with an EMA and
+   re-solves Lemma 6's equation for T each epoch, keeping E[b(t)] pinned to
+   the target global batch without re-profiling.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import consensus as cns
+from .dual_averaging import prox_step
+from .engine import EngineConfig, History, _masked_grads
+from .stragglers import StragglerModel, amb_batch_sizes
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# 1. Pipelined AMB: harvest the consensus-window gradients
+# ---------------------------------------------------------------------------
+
+def run_amb_pipelined(objective, model: StragglerModel, cfg: EngineConfig, *,
+                      epochs: int, key: Array, sample_args=(),
+                      eval_fn: Optional[Callable[[Array], Array]] = None,
+                      f_star: float = 0.0) -> History:
+    """AMB with compute/communication overlap (staleness-1 gradients).
+
+    Epoch t consensus message of node i:
+
+        m_i = n * (b_i(t) + a_i(t-1)) * [z_i(t) + g_i(t)]
+
+    where g_i(t) is the weighted mean of b_i(t) fresh gradients at w_i(t)
+    and a_i(t-1) stale gradients evaluated at w_i(t-1) during the previous
+    consensus window.  Wall time per epoch is identical to AMB (T + T_c);
+    only idle cycles are reclaimed.
+    """
+    p = jnp.asarray(cfg.build_p(), jnp.float32)
+    d = objective.init_w().shape[0]
+    n = cfg.n
+    eval_fn = eval_fn or (lambda w_bar: jnp.float32(0.0))
+
+    w0 = jnp.zeros((n, d), jnp.float32)
+    z0 = jnp.zeros((n, d), jnp.float32)
+    stale_g0 = jnp.zeros((n, d), jnp.float32)   # sum of stale grads
+    stale_b0 = jnp.zeros((n,), jnp.int32)
+
+    def epoch(carry, t):
+        w, z, clock, stale_gsum, stale_b = carry
+        key_t = jax.random.fold_in(key, t)
+        ktime, kgrad, kstale = jax.random.split(key_t, 3)
+        times = model.per_gradient_times(ktime, n, cfg.b_max)
+
+        b = amb_batch_sizes(times, cfg.compute_time)
+        b_with_comm = amb_batch_sizes(times, cfg.compute_time + cfg.comm_time)
+        a = b_with_comm - b
+
+        # fresh gradients at w (mean over b_i samples) -> sums
+        g_fresh, lsum = _masked_grads(objective, w, b, cfg, kgrad, sample_args)
+        bf = b.astype(w.dtype)
+        fresh_gsum = g_fresh * bf[:, None]
+
+        # combine with the stale sums harvested during the previous T_c
+        tot_b = bf + stale_b.astype(w.dtype)
+        g_comb = (fresh_gsum + stale_gsum) / jnp.maximum(tot_b, 1.0)[:, None]
+
+        # weighted consensus over z + g_comb, weights = total contributions
+        msg = n * tot_b[:, None] * (z + g_comb)
+        msg = jnp.concatenate([msg, n * tot_b[:, None]], axis=1)
+        if cfg.consensus_mode == "exact":
+            out = cns.exact_average(msg)
+        else:
+            out = cns.gossip(msg, p, cfg.consensus_rounds)
+        exact = cns.exact_average(msg)
+        normalise = lambda m: m[:, :-1] / jnp.maximum(m[:, -1:], 1e-12)
+        z_new = normalise(out)
+        eps = jnp.max(jnp.linalg.norm(z_new - normalise(exact), axis=1))
+
+        beta_next = cfg.beta(t + 1)
+        w_new = jax.vmap(
+            lambda zi: prox_step(zi, beta_next, cfg.radius))(z_new)
+
+        # harvest NEXT epoch's stale gradients: a_i samples at *current* w
+        # (the iterate nodes hold during this epoch's consensus window).
+        g_stale, _ = _masked_grads(objective, w, a, cfg, kstale, sample_args)
+        af = a.astype(w.dtype)
+        new_stale_gsum = g_stale * af[:, None]
+
+        mean_loss = lsum / jnp.maximum(bf, 1.0)
+        c = tot_b                      # all contributions are *used* work
+        regret_inc = jnp.sum(lsum + af * mean_loss - c * f_star)
+        clock_new = clock + cfg.compute_time + cfg.comm_time
+        out_t = dict(
+            wall_time=clock_new, batch_sizes=b + stale_b,
+            global_batch=(b + stale_b).sum(),
+            eval_loss=eval_fn(w_new.mean(0)),
+            train_loss=jnp.sum(lsum) / jnp.maximum(bf.sum(), 1.0),
+            consensus_eps=eps, regret_inc=regret_inc, potential=c.sum(),
+        )
+        return (w_new, z_new, clock_new, new_stale_gsum, a), out_t
+
+    (_, _, _, _, _), tr = jax.lax.scan(
+        epoch, (w0, z0, jnp.float32(0.0), stale_g0, stale_b0),
+        jnp.arange(1, epochs + 1))
+    return History(
+        wall_time=tr["wall_time"], batch_sizes=tr["batch_sizes"],
+        global_batch=tr["global_batch"], eval_loss=tr["eval_loss"],
+        train_loss=tr["train_loss"], consensus_eps=tr["consensus_eps"],
+        regret=jnp.cumsum(tr["regret_inc"]),
+        potential_samples=tr["potential"])
+
+
+# ---------------------------------------------------------------------------
+# 2. Quantized gossip: more rounds per byte-budget
+# ---------------------------------------------------------------------------
+
+def quantize_unbiased(x: Array, bits: int, key: Array) -> Array:
+    """Stochastic uniform quantization, unbiased: E[q(x)] = x.
+
+    Per-row (per-node message) dynamic range; levels = 2^bits - 1.
+    """
+    levels = float(2 ** bits - 1)
+    lo = x.min(axis=-1, keepdims=True)
+    hi = x.max(axis=-1, keepdims=True)
+    scale = jnp.maximum(hi - lo, 1e-12) / levels
+    u = (x - lo) / scale
+    fl = jnp.floor(u)
+    prob = u - fl
+    rnd = (jax.random.uniform(key, x.shape) < prob).astype(x.dtype)
+    return lo + (fl + rnd) * scale
+
+
+def gossip_quantized(messages: Array, p: Array, rounds: int, bits: int,
+                     key: Array) -> Array:
+    """Gossip with *difference* (delta) compression.
+
+    Naive per-round quantization injects noise proportional to the full
+    message magnitude every round — it never converges below the
+    quantization floor (we measured eps ~10x WORSE than fp32 at r=5; see
+    EXPERIMENTS.md §Perf, refuted-hypothesis log).  The fix, standard in
+    compressed decentralized optimization (cf. CHOCO-SGD, Koloskova et al.
+    2019), is to transmit quantized *deltas* against a publicly-known
+    replica h_j of each node's value:
+
+        send_j   = q(m_j - h_j)          (shrinks as gossip converges)
+        h_j     += send_j                (all nodes update the same replica)
+        m_i     <- P_ii m_i + sum_{j != i} P_ij h_j
+
+    The self term stays exact.  Delta magnitude decays ~ lambda_2^k, so the
+    injected noise decays with it, and the int8 wire format still buys
+    (32/bits)x the rounds per byte budget.
+    """
+    messages = jnp.asarray(messages)
+    p = jnp.asarray(p, messages.dtype)
+    flat = messages.reshape(messages.shape[0], -1)
+    diag = jnp.diag(p)[:, None]
+    off = p - jnp.diag(jnp.diag(p))
+
+    def body(k, carry):
+        m, h = carry
+        delta_q = quantize_unbiased(m - h, bits, jax.random.fold_in(key, k))
+        h = h + delta_q
+        m = diag * m + off @ h
+        return m, h
+
+    # replicas start at zero: round 1's delta is the (quantized) full
+    # message, so every round is an int8 wire message — strict byte parity
+    # with the (32/bits)x round multiplier.
+    out, _ = jax.lax.fori_loop(0, rounds, body, (flat, jnp.zeros_like(flat)))
+    return out.reshape(messages.shape)
+
+
+def run_amb_quantized(objective, model: StragglerModel, cfg: EngineConfig, *,
+                      bits: int = 8, epochs: int, key: Array,
+                      sample_args=(), eval_fn=None,
+                      f_star: float = 0.0) -> History:
+    """AMB where the fixed T_c buys (32/bits) x the rounds via quantization."""
+    rounds = int(cfg.consensus_rounds * 32 / bits)
+    p = jnp.asarray(cfg.build_p(), jnp.float32)
+    d = objective.init_w().shape[0]
+    n = cfg.n
+    eval_fn = eval_fn or (lambda w_bar: jnp.float32(0.0))
+
+    w0 = jnp.zeros((n, d), jnp.float32)
+    z0 = jnp.zeros((n, d), jnp.float32)
+
+    def epoch(carry, t):
+        w, z, clock = carry
+        key_t = jax.random.fold_in(key, t)
+        ktime, kgrad, kq = jax.random.split(key_t, 3)
+        times = model.per_gradient_times(ktime, n, cfg.b_max)
+        b = amb_batch_sizes(times, cfg.compute_time)
+
+        g, lsum = _masked_grads(objective, w, b, cfg, kgrad, sample_args)
+        bw = b.astype(w.dtype)
+        payload = n * bw[:, None] * (z + g)           # (n, d) — quantized
+        weight = n * bw[:, None]                      # (n, 1) — sent exact:
+        # one fp32 scalar per node per round is byte-noise next to d coords,
+        # and folding it into the quantized row would blow up the dynamic
+        # range (n*b_i ~ 1e3-1e4 vs O(1) dual coordinates).
+        out_p = gossip_quantized(payload, p, rounds, bits, kq)
+        out_w = cns.gossip(weight, p, rounds)
+        z_new = out_p / jnp.maximum(out_w, 1e-12)
+        exact = cns.exact_average(
+            jnp.concatenate([payload, weight], axis=1))
+        z_exact = exact[:, :-1] / jnp.maximum(exact[:, -1:], 1e-12)
+        eps = jnp.max(jnp.linalg.norm(z_new - z_exact, axis=1))
+        beta_next = cfg.beta(t + 1)
+        w_new = jax.vmap(
+            lambda zi: prox_step(zi, beta_next, cfg.radius))(z_new)
+
+        clock_new = clock + cfg.compute_time + cfg.comm_time
+        mean_loss = lsum / jnp.maximum(bw, 1.0)
+        regret_inc = jnp.sum(lsum - bw * f_star)
+        out_t = dict(
+            wall_time=clock_new, batch_sizes=b, global_batch=b.sum(),
+            eval_loss=eval_fn(w_new.mean(0)),
+            train_loss=jnp.sum(lsum) / jnp.maximum(bw.sum(), 1.0),
+            consensus_eps=eps, regret_inc=regret_inc, potential=b.sum(),
+        )
+        return (w_new, z_new, clock_new), out_t
+
+    (_, _, _), tr = jax.lax.scan(
+        epoch, (w0, z0, jnp.float32(0.0)), jnp.arange(1, epochs + 1))
+    return History(
+        wall_time=tr["wall_time"], batch_sizes=tr["batch_sizes"],
+        global_batch=tr["global_batch"], eval_loss=tr["eval_loss"],
+        train_loss=tr["train_loss"], consensus_eps=tr["consensus_eps"],
+        regret=jnp.cumsum(tr["regret_inc"]),
+        potential_samples=tr["potential"])
+
+
+# ---------------------------------------------------------------------------
+# 3. Adaptive compute budget: online Lemma-6
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AdaptiveBudget:
+    """EMA controller for the per-epoch compute budget T.
+
+    Tracks the aggregate observed rate  r(t) = b(t) / T(t)  (gradients per
+    second across the cluster) and sets
+
+        T(t+1) = clip(b_target / r_ema, t_min, t_max).
+
+    Converges to Lemma 6's T when the straggler distribution is stationary;
+    tracks it when mu drifts.
+    """
+
+    b_target: int
+    ema: float = 0.9
+    t_min: float = 1e-3
+    t_max: float = 1e6
+
+    def init(self, t0: float) -> dict:
+        return {"t_budget": jnp.float32(t0),
+                "rate": jnp.float32(self.b_target / t0)}
+
+    def update(self, state: dict, b_observed: Array) -> dict:
+        rate_obs = b_observed.astype(jnp.float32) / state["t_budget"]
+        rate = self.ema * state["rate"] + (1.0 - self.ema) * rate_obs
+        t_new = jnp.clip(self.b_target / jnp.maximum(rate, 1e-9),
+                         self.t_min, self.t_max)
+        return {"t_budget": t_new, "rate": rate}
+
+
+def run_amb_adaptive(objective, model_fn, cfg: EngineConfig, *,
+                     controller: AdaptiveBudget, epochs: int, key: Array,
+                     sample_args=(), eval_fn=None,
+                     f_star: float = 0.0) -> History:
+    """AMB with the adaptive-T controller.
+
+    ``model_fn(t)`` returns the straggler model for epoch t — allowing
+    non-stationary clusters (the case fixed-T cannot handle).
+    """
+    p = jnp.asarray(cfg.build_p(), jnp.float32)
+    d = objective.init_w().shape[0]
+    n = cfg.n
+    eval_fn = eval_fn or (lambda w_bar: jnp.float32(0.0))
+
+    w = jnp.zeros((n, d), jnp.float32)
+    z = jnp.zeros((n, d), jnp.float32)
+    ctrl = controller.init(cfg.compute_time)
+    clock = 0.0
+    rows = []
+    regret = 0.0
+
+    # non-stationary model -> per-epoch python loop (epochs is small here)
+    step = _make_adaptive_step(objective, cfg, p, sample_args, f_star,
+                               controller)
+    for t in range(1, epochs + 1):
+        key_t = jax.random.fold_in(key, t)
+        model = model_fn(t)
+        ktime, kgrad = jax.random.split(key_t)
+        times = model.per_gradient_times(ktime, n, cfg.b_max)
+        w, z, ctrl, m = step(w, z, ctrl, times, kgrad, jnp.int32(t))
+        clock += float(ctrl["last_epoch_time"])
+        regret += float(m["regret_inc"])
+        rows.append(dict(wall_time=clock, batch_sizes=np.asarray(m["b"]),
+                         global_batch=float(m["b"].sum()),
+                         eval_loss=float(eval_fn(w.mean(0))),
+                         train_loss=float(m["train_loss"]),
+                         consensus_eps=float(m["eps"]), regret=regret,
+                         potential=float(m["b"].sum())))
+
+    return History(
+        wall_time=jnp.asarray([r["wall_time"] for r in rows]),
+        batch_sizes=jnp.asarray(np.stack([r["batch_sizes"] for r in rows])),
+        global_batch=jnp.asarray([r["global_batch"] for r in rows]),
+        eval_loss=jnp.asarray([r["eval_loss"] for r in rows]),
+        train_loss=jnp.asarray([r["train_loss"] for r in rows]),
+        consensus_eps=jnp.asarray([r["consensus_eps"] for r in rows]),
+        regret=jnp.asarray([r["regret"] for r in rows]),
+        potential_samples=jnp.asarray([r["potential"] for r in rows]))
+
+
+def _make_adaptive_step(objective, cfg, p, sample_args, f_star, controller):
+    @jax.jit
+    def step(w, z, ctrl, times, kgrad, t):
+        t_budget = ctrl["t_budget"]
+        b = amb_batch_sizes(times, t_budget)
+        g, lsum = _masked_grads(objective, w, b, cfg, kgrad, sample_args)
+        n = cfg.n
+        bw = b.astype(w.dtype)
+        msg = n * bw[:, None] * (z + g)
+        msg = jnp.concatenate([msg, n * bw[:, None]], axis=1)
+        if cfg.consensus_mode == "exact":
+            out = cns.exact_average(msg)
+        else:
+            out = cns.gossip(msg, p, cfg.consensus_rounds)
+        exact = cns.exact_average(msg)
+        normalise = lambda m: m[:, :-1] / jnp.maximum(m[:, -1:], 1e-12)
+        z_new = normalise(out)
+        eps = jnp.max(jnp.linalg.norm(z_new - normalise(exact), axis=1))
+        beta_next = cfg.beta(t.astype(jnp.float32) + 1.0)
+        w_new = jax.vmap(
+            lambda zi: prox_step(zi, beta_next, cfg.radius))(z_new)
+
+        new_ctrl = controller.update(
+            {"t_budget": t_budget, "rate": ctrl["rate"]}, b.sum())
+        new_ctrl["last_epoch_time"] = t_budget + cfg.comm_time
+        regret_inc = jnp.sum(lsum - bw * f_star)
+        metrics = dict(b=b, eps=eps, regret_inc=regret_inc,
+                       train_loss=jnp.sum(lsum) / jnp.maximum(bw.sum(), 1.0))
+        return w_new, z_new, new_ctrl, metrics
+    return step

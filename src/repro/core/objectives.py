@@ -1,0 +1,157 @@
+"""Convex objectives from the paper's experiments (§6): linear + logistic regression.
+
+Each objective exposes
+
+    loss(w, batch)      -> scalar mean loss over the batch
+    grad(w, batch)      -> mean gradient (same shape as w)
+    value(w)            -> population objective F(w) when known (linreg)
+
+plus the constants of §4.1 (Lipschitz L, smoothness K, gradient-noise sigma)
+where they are available in closed form, so the regret bounds of Thm 2/4 can
+be evaluated numerically against measured regret.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Linear regression (paper §6.1): y = x^T w* + eta, x ~ N(0, I)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class LinearRegression:
+    dim: int
+    noise_var: float = 1e-3
+
+    def init_w(self) -> Array:
+        return jnp.zeros((self.dim,), dtype=jnp.float32)
+
+    def sample(self, key: Array, shape: tuple[int, ...], w_star: Array):
+        """Draw (x, y) with x ~ N(0, I_d), y = x.w* + N(0, noise_var)."""
+        kx, kn = jax.random.split(key)
+        x = jax.random.normal(kx, shape + (self.dim,), dtype=jnp.float32)
+        noise = jnp.sqrt(self.noise_var) * jax.random.normal(
+            kn, shape, dtype=jnp.float32
+        )
+        y = x @ w_star + noise
+        return x, y
+
+    def loss(self, w: Array, batch) -> Array:
+        x, y = batch
+        resid = x @ w - y
+        return 0.5 * jnp.mean(resid * resid)
+
+    def grad(self, w: Array, batch) -> Array:
+        x, y = batch
+        resid = x @ w - y                      # (b,)
+        return x.T @ resid / resid.shape[-1]
+
+    def masked_grad(self, w: Array, batch, mask: Array) -> Array:
+        """Mean gradient over samples with mask==1 (variable minibatch)."""
+        x, y = batch
+        resid = (x @ w - y) * mask
+        denom = jnp.maximum(mask.sum(), 1.0)
+        return x.T @ resid / denom
+
+    def masked_sums(self, w: Array, batch, mask: Array):
+        """(grad sum, per-sample loss sum) over masked samples — for chunked
+        accumulation of variable minibatches (engine)."""
+        x, y = batch
+        resid = x @ w - y
+        gsum = x.T @ (resid * mask)
+        lsum = 0.5 * jnp.sum(mask * resid * resid)
+        return gsum, lsum
+
+    def population_loss(self, w: Array, w_star: Array) -> Array:
+        """F(w) = 0.5 E[(x.(w-w*) - eta)^2] = 0.5(||w-w*||^2 + noise_var)."""
+        d = w - w_star
+        return 0.5 * (d @ d + self.noise_var)
+
+
+# ---------------------------------------------------------------------------
+# Multiclass logistic regression (paper §6.2) on a synthetic MNIST-like mixture
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class LogisticRegression:
+    dim: int = 784
+    num_classes: int = 10
+    bias: bool = True
+
+    @property
+    def param_dim(self) -> int:
+        return self.num_classes * (self.dim + int(self.bias))
+
+    def init_w(self) -> Array:
+        return jnp.zeros((self.param_dim,), dtype=jnp.float32)
+
+    def _unflatten(self, w: Array) -> Array:
+        return w.reshape(self.num_classes, self.dim + int(self.bias))
+
+    def make_class_means(self, key: Array, spread: float = 2.0) -> Array:
+        return spread * jax.random.normal(
+            key, (self.num_classes, self.dim), dtype=jnp.float32
+        ) / jnp.sqrt(self.dim)
+
+    def sample(self, key: Array, shape: tuple[int, ...], class_means: Array):
+        """MNIST stand-in: x | y ~ N(mu_y, I); y uniform over classes."""
+        ky, kx = jax.random.split(key)
+        y = jax.random.randint(ky, shape, 0, self.num_classes)
+        x = class_means[y] + jax.random.normal(
+            kx, shape + (self.dim,), dtype=jnp.float32
+        )
+        return x, y
+
+    def _logits(self, w: Array, x: Array) -> Array:
+        wm = self._unflatten(w)
+        if self.bias:
+            wx, b = wm[:, :-1], wm[:, -1]
+            return x @ wx.T + b
+        return x @ wm.T
+
+    def loss(self, w: Array, batch) -> Array:
+        x, y = batch
+        logits = self._logits(w, x)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        return -jnp.mean(jnp.take_along_axis(logp, y[..., None], axis=-1))
+
+    def grad(self, w: Array, batch) -> Array:
+        return jax.grad(self.loss)(w, batch)
+
+    def masked_grad(self, w: Array, batch, mask: Array) -> Array:
+        x, y = batch
+        logits = self._logits(w, x)                       # (b, c)
+        p = jax.nn.softmax(logits, axis=-1)
+        onehot = jax.nn.one_hot(y, self.num_classes, dtype=p.dtype)
+        err = (p - onehot) * mask[..., None]              # (b, c)
+        denom = jnp.maximum(mask.sum(), 1.0)
+        gx = err.T @ x / denom                            # (c, d)
+        if self.bias:
+            gb = err.sum(0) / denom                       # (c,)
+            return jnp.concatenate([gx, gb[:, None]], axis=1).reshape(-1)
+        return gx.reshape(-1)
+
+    def masked_sums(self, w: Array, batch, mask: Array):
+        """(grad sum, per-sample loss sum) over masked samples."""
+        x, y = batch
+        logits = self._logits(w, x)                       # (b, c)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        lsum = -jnp.sum(
+            mask * jnp.take_along_axis(logp, y[..., None], axis=-1)[..., 0])
+        p = jnp.exp(logp)
+        onehot = jax.nn.one_hot(y, self.num_classes, dtype=p.dtype)
+        err = (p - onehot) * mask[..., None]              # (b, c)
+        gx = err.T @ x                                    # (c, d)
+        if self.bias:
+            gb = err.sum(0)
+            gsum = jnp.concatenate([gx, gb[:, None]], axis=1).reshape(-1)
+        else:
+            gsum = gx.reshape(-1)
+        return gsum, lsum

@@ -1,0 +1,243 @@
+"""Straggler / compute-time models (paper §5, App. H, App. I.2–I.4).
+
+All three of the paper's experimental methodologies are implemented:
+
+  * ``ShiftedExponential`` — the analytical model of §5/App. H: the time to
+    compute a reference batch of ``b_ref`` gradients is
+    ``T ~ zeta + Exp(lambda)``, with *linear progress* within an epoch
+    (App. I.2: conditioned on T, computing k gradients takes k*T/b_ref).
+  * ``InducedGroups`` — EC2 background-job stragglers (App. I.3): nodes are
+    partitioned into groups whose per-batch times cluster around distinct
+    means (the 10/20/30-second clusters of Fig. 6a).
+  * ``PauseModel`` — the HPC experiment (App. I.4): after *every* gradient a
+    node pauses for max(0, N(mu_j, sigma_j^2)) seconds, group-dependent.
+
+The unified interface is per-gradient compute times: a model returns an
+``(n, b_max)`` array of the times each node needs for its s-th gradient of the
+epoch.  From these we derive, exactly and fully vectorised:
+
+  * AMB batch sizes under a fixed compute budget T (cumulative time <= T),
+  * FMB per-epoch finishing times for a fixed per-node batch b/n.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+class StragglerModel:
+    """Base: subclasses sample per-gradient times."""
+
+    def per_gradient_times(self, key: Array, n: int, b_max: int) -> Array:
+        raise NotImplementedError
+
+    # Moments of the *per-reference-batch* time T_i(t), where available.
+    def mean_batch_time(self) -> float:
+        raise NotImplementedError
+
+    def std_batch_time(self) -> float:
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class Deterministic(StragglerModel):
+    """Homogeneous cluster — every gradient takes the same time."""
+
+    grad_time: float = 1.0
+    b_ref: int = 1
+
+    def per_gradient_times(self, key, n, b_max):
+        return jnp.full((n, b_max), self.grad_time, dtype=jnp.float32)
+
+    def mean_batch_time(self):
+        return self.grad_time * self.b_ref
+
+    def std_batch_time(self):
+        return 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class ShiftedExponential(StragglerModel):
+    """T_i(t) = zeta + Exp(lam) per batch of b_ref gradients; linear progress.
+
+    Paper App. I.2 uses lam = 2/3, zeta = 1, b_ref = 600.
+    """
+
+    lam: float = 2.0 / 3.0
+    zeta: float = 1.0
+    b_ref: int = 600
+
+    def per_gradient_times(self, key, n, b_max):
+        t_batch = self.zeta + jax.random.exponential(key, (n,)) / self.lam
+        per_grad = t_batch / self.b_ref
+        return jnp.broadcast_to(per_grad[:, None], (n, b_max)).astype(jnp.float32)
+
+    def mean_batch_time(self):
+        return self.zeta + 1.0 / self.lam
+
+    def std_batch_time(self):
+        return 1.0 / self.lam
+
+    def expected_max_batch_time(self, n: int) -> float:
+        """E[max_i T_i] = zeta + H_n / lam (App. H eq. 81, exact form)."""
+        h_n = float(np.sum(1.0 / np.arange(1, n + 1)))
+        return self.zeta + h_n / self.lam
+
+
+@dataclasses.dataclass(frozen=True)
+class InducedGroups(StragglerModel):
+    """EC2 background-job stragglers (App. I.3).
+
+    ``group_sizes`` nodes per group; group g's per-batch time is
+    ``zeta_g + Exp(lam_g)`` — the paper's three clusters (~10s fast, ~20s
+    intermediate, ~30s bad for b_ref=585) correspond to zetas=(9,18,27),
+    lams ~ 1.
+    """
+
+    group_sizes: Sequence[int] = (5, 2, 3)
+    zetas: Sequence[float] = (9.0, 18.0, 27.0)
+    lams: Sequence[float] = (1.0, 1.0, 1.0)
+    b_ref: int = 585
+
+    def _node_groups(self) -> np.ndarray:
+        return np.repeat(np.arange(len(self.group_sizes)), self.group_sizes)
+
+    def per_gradient_times(self, key, n, b_max):
+        groups = self._node_groups()
+        if len(groups) != n:
+            raise ValueError(f"group sizes sum to {len(groups)}, need n={n}")
+        zeta = jnp.asarray(self.zetas, jnp.float32)[groups]
+        lam = jnp.asarray(self.lams, jnp.float32)[groups]
+        t_batch = zeta + jax.random.exponential(key, (n,)) / lam
+        return jnp.broadcast_to(
+            (t_batch / self.b_ref)[:, None], (n, b_max)
+        ).astype(jnp.float32)
+
+    def mean_batch_time(self):
+        groups = self._node_groups()
+        means = np.asarray(self.zetas)[groups] + 1.0 / np.asarray(self.lams)[groups]
+        return float(means.mean())
+
+    def std_batch_time(self):
+        groups = self._node_groups()
+        means = np.asarray(self.zetas)[groups] + 1.0 / np.asarray(self.lams)[groups]
+        second = means**2 + 1.0 / np.asarray(self.lams)[groups] ** 2
+        return float(np.sqrt(second.mean() - means.mean() ** 2))
+
+
+@dataclasses.dataclass(frozen=True)
+class PauseModel(StragglerModel):
+    """HPC pause model (App. I.4): per-gradient time = base + max(0, N(mu_g, sg^2)).
+
+    Paper: 5 groups, mus = (5, 10, 20, 35, 55) msec, sigma_g = g (g in 1..5).
+    """
+
+    group_sizes: Sequence[int] = (10, 10, 10, 10, 10)
+    mus_ms: Sequence[float] = (5.0, 10.0, 20.0, 35.0, 55.0)
+    base_ms: float = 1.5
+    b_ref: int = 10
+
+    def _node_groups(self) -> np.ndarray:
+        return np.repeat(np.arange(len(self.group_sizes)), self.group_sizes)
+
+    def per_gradient_times(self, key, n, b_max):
+        groups = self._node_groups()
+        if len(groups) != n:
+            raise ValueError(f"group sizes sum to {len(groups)}, need n={n}")
+        mu = jnp.asarray(self.mus_ms, jnp.float32)[groups][:, None]
+        sg = (jnp.asarray(groups, jnp.float32) + 1.0)[:, None]
+        pauses = mu + sg * jax.random.normal(key, (n, b_max), dtype=jnp.float32)
+        pauses = jnp.maximum(pauses, 0.0)
+        return (self.base_ms + pauses) / 1000.0  # seconds
+
+    def mean_batch_time(self):
+        groups = self._node_groups()
+        mu = np.asarray(self.mus_ms)[groups].mean()
+        return float((self.base_ms + mu) * self.b_ref / 1000.0)
+
+    def std_batch_time(self):
+        groups = self._node_groups()
+        per_node = (self.base_ms + np.asarray(self.mus_ms)[groups]) * self.b_ref / 1000.0
+        return float(per_node.std())
+
+
+# ---------------------------------------------------------------------------
+# Derived quantities
+# ---------------------------------------------------------------------------
+
+def amb_batch_sizes(per_grad_times: Array, budget_t: float) -> Array:
+    """b_i(t): gradients finished before the fixed compute deadline T."""
+    cum = jnp.cumsum(per_grad_times, axis=1)
+    return jnp.sum(cum <= budget_t, axis=1).astype(jnp.int32)
+
+
+def fmb_finish_times(per_grad_times: Array, b_per_node: int) -> Array:
+    """Per-node time to finish exactly b/n gradients."""
+    if b_per_node < 1:
+        raise ValueError("b_per_node >= 1")
+    cum = jnp.cumsum(per_grad_times, axis=1)
+    if b_per_node > per_grad_times.shape[1]:
+        raise ValueError("b_max too small for requested FMB batch")
+    return cum[:, b_per_node - 1]
+
+
+def amb_budget_from_fmb(model: StragglerModel, n: int, b_global: int) -> float:
+    """Lemma 6: T = (1 + n/b) mu makes E[b_AMB] >= b_FMB.
+
+    ``mu`` is the mean time to compute b/n gradients (Assumptions 1+2 say
+    T_i is the time for b/n gradients; our models parameterise per-b_ref
+    batches, so rescale).
+    """
+    b_per_node = b_global / n
+    mu_ref = model.mean_batch_time()          # time for b_ref gradients
+    b_ref = getattr(model, "b_ref", 1)
+    mu = mu_ref * b_per_node / b_ref          # time for b/n gradients
+    return (1.0 + n / b_global) * mu
+
+
+def amb_budget_calibrated(model: StragglerModel, n: int, b_global: int,
+                          key: Array | None = None, epochs: int = 64,
+                          b_max: int | None = None) -> float:
+    """Empirical T such that E[b(T)] ~= b_global (the paper's own method).
+
+    Lemma 6's closed form ``(1 + n/b) mu`` assumes T_i identically
+    distributed across nodes (Assumption 1).  For heterogeneous clusters
+    (InducedGroups, PauseModel — App. I.3/I.4) the mean-rate formula
+    overshoots: fast groups contribute disproportionately many gradients, so
+    the Lemma-6 T yields E[b] >> b_global and a needlessly long epoch.  The
+    paper calibrates empirically instead (App. I.4: T = 115 ms chosen so the
+    average minibatch ~= 504 ~ b = 500); this reproduces that procedure by
+    bisecting T against simulated per-gradient times.
+    """
+    import jax as _jax
+    if key is None:
+        key = _jax.random.PRNGKey(0)
+    if b_max is None:
+        b_max = max(4 * b_global // n, 16)
+    times = jnp.stack([
+        model.per_gradient_times(_jax.random.fold_in(key, e), n, b_max)
+        for e in range(epochs)])                       # (epochs, n, b_max)
+
+    def mean_b(t):
+        return float(jnp.mean(jnp.sum(
+            jnp.cumsum(times, axis=2) <= t, axis=2).sum(axis=1)))
+
+    lo, hi = 0.0, float(jnp.sum(times, axis=2).max())
+    for _ in range(60):
+        mid = 0.5 * (lo + hi)
+        if mean_b(mid) < b_global:
+            lo = mid
+        else:
+            hi = mid
+    return hi
+
+
+def bertsimas_max_bound(mu: float, sigma: float, n: int) -> float:
+    """E[max_i T_i] <= mu + sigma sqrt(n-1) (Arnold-Groeneveld / Bertsimas)."""
+    return mu + sigma * float(np.sqrt(max(n - 1, 0)))

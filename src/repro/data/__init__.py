@@ -1,0 +1,5 @@
+from .pipeline import (LMTokenStream, LinRegStream, LogRegStream,
+                       make_stream, shard_batch)
+
+__all__ = ["LMTokenStream", "LinRegStream", "LogRegStream", "make_stream",
+           "shard_batch"]

@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the perf-critical compute layers (+ oracles).
+
+Each kernel: ``<name>.py`` (pl.pallas_call + BlockSpec), a jit'd wrapper in
+``ops.py``, and a pure-jnp oracle in ``ref.py``; tests sweep shapes/dtypes in
+interpret mode against the oracle.
+"""
+from . import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,80 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+Routing policy: on TPU backends the Pallas kernel runs compiled; on CPU (this
+container) the pure-jnp oracle from :mod:`ref` runs instead, and the kernels
+themselves are exercised under ``interpret=True`` by the test suite.  Pass
+``force="pallas_interpret"`` to exercise the kernel body anywhere.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .dual_update import dual_update_pallas
+from .flash_attention import flash_attention_pallas
+from .gossip_combine import gossip_combine_pallas
+from .rwkv6_scan import rwkv6_scan_pallas
+
+Array = jax.Array
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def dual_update(z: Array, w0: Array, beta: Array,
+                radius: Optional[float] = None,
+                force: Optional[str] = None) -> Array:
+    """w = w0 - z/(2 beta), optionally projected onto ||w - w0|| <= radius."""
+    if force == "pallas_interpret":
+        w = dual_update_pallas(z, w0, beta, interpret=True)
+    elif force == "ref" or not _on_tpu():
+        w = ref.dual_update_ref(z, w0, beta)
+    else:
+        w = dual_update_pallas(z, w0, beta)
+    if radius is not None:
+        delta = w - w0.astype(jnp.float32)
+        nrm = jnp.linalg.norm(delta.reshape(-1))
+        w = w0.astype(jnp.float32) + delta * jnp.minimum(
+            1.0, radius / jnp.maximum(nrm, 1e-30))
+    return w
+
+
+def gossip_combine(msgs: Array, weights: Array,
+                   force: Optional[str] = None) -> Array:
+    if force == "pallas_interpret":
+        return gossip_combine_pallas(msgs, weights, interpret=True)
+    if force == "ref" or not _on_tpu():
+        return ref.gossip_combine_ref(msgs, weights)
+    return gossip_combine_pallas(msgs, weights)
+
+
+def flash_attention(q: Array, k: Array, v: Array, *, causal: bool = True,
+                    window: int = 0, q_offset: int = 0,
+                    force: Optional[str] = None) -> Array:
+    """(B, H, Sq, hd) x (B, KV, Skv, hd) -> (B, H, Sq, hd)."""
+    if force == "pallas_interpret":
+        return flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                      q_offset=q_offset, interpret=True)
+    if force == "ref" or not _on_tpu():
+        return ref.flash_attention_ref(q, k, v, causal=causal, window=window,
+                                       q_offset=q_offset).astype(q.dtype)
+    return flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                  q_offset=q_offset)
+
+
+def rwkv6_scan(r: Array, k: Array, v: Array, decay: Array, u: Array,
+               force: Optional[str] = None) -> Array:
+    """(BH, S, hd) wkv scan; u (BH, hd). Returns fp32 (BH, S, hd)."""
+    if force == "pallas_interpret":
+        return rwkv6_scan_pallas(r, k, v, decay, u, interpret=True)
+    if force == "ref" or not _on_tpu():
+        bh, s, hd = r.shape
+        rr = lambda t: t.reshape(1, bh, s, hd)   # treat BH rows as heads
+        y = ref.rwkv6_chunk_ref(rr(r), rr(k), rr(v), rr(decay),
+                                u.reshape(bh, hd))
+        return y.reshape(bh, s, hd)
+    return rwkv6_scan_pallas(r, k, v, decay, u)

@@ -1,0 +1,103 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+Each ``<name>`` in this package has ``ref.<name>_ref`` with identical
+semantics; tests sweep shapes/dtypes and assert allclose between the kernel
+(interpret=True on CPU) and these functions.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def dual_update_ref(z: Array, w0: Array, beta: Array) -> Array:
+    """Fused dual-averaging prox: w = w0 - z / (2 beta).  fp32 math."""
+    return (w0.astype(jnp.float32)
+            - z.astype(jnp.float32) / (2.0 * beta.astype(jnp.float32)))
+
+
+def gossip_combine_ref(msgs: Array, weights: Array) -> Array:
+    """Weighted neighbor combine: out = sum_k weights[k] * msgs[k].
+
+    msgs: (K, N); weights: (K,).  This is one row of m <- P m restricted to
+    the K in-neighborhood messages (self included).
+    """
+    return jnp.einsum("k,kn->n", weights.astype(jnp.float32),
+                      msgs.astype(jnp.float32))
+
+
+def flash_attention_ref(q: Array, k: Array, v: Array, *, causal: bool = True,
+                        window: int = 0, q_offset: int = 0) -> Array:
+    """Naive softmax attention oracle.
+
+    q: (B, H, Sq, hd); k, v: (B, KV, Skv, hd); GQA via H = KV * G.
+    Returns (B, H, Sq, hd) in fp32.
+    """
+    b, h, sq, hd = q.shape
+    kvh = k.shape[1]
+    g = h // kvh
+    qf = q.astype(jnp.float32).reshape(b, kvh, g, sq, hd)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bkgqh,bkch->bkgqc", qf, kf) / jnp.sqrt(hd)
+    q_pos = q_offset + jnp.arange(sq)
+    k_pos = jnp.arange(k.shape[2])
+    mask = jnp.ones((sq, k.shape[2]), bool)
+    if causal:
+        mask &= k_pos[None, :] <= q_pos[:, None]
+    if window > 0:
+        mask &= (q_pos[:, None] - k_pos[None, :]) < window
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqc,bkch->bkgqh", p, vf)
+    return out.reshape(b, h, sq, hd)
+
+
+def rwkv6_chunk_ref(r: Array, k: Array, v: Array, decay: Array,
+                    u: Array) -> Array:
+    """RWKV6 wkv over the full sequence, chunk-free sequential oracle.
+
+    r, k, v, decay: (B, H, S, hd); u: (H, hd) current-token bonus.
+    Returns y (B, H, S, hd), fp32.  decay in (0, 1].
+    """
+    b, h, s, hd = r.shape
+    rf, kf, vf, df = (t.astype(jnp.float32) for t in (r, k, v, decay))
+
+    def step(state, inp):
+        rt, kt, vt, dt = inp                     # (B,H,hd)
+        kv = jnp.einsum("bhd,bhe->bhde", kt, vt)
+        y = jnp.einsum("bhd,bhde->bhe", rt, state + u[None, :, :, None] * kv)
+        state = dt[..., None] * state + kv
+        return state, y
+
+    st0 = jnp.zeros((b, h, hd, hd), jnp.float32)
+    xs = tuple(t.transpose(2, 0, 1, 3) for t in (rf, kf, vf, df))
+    _, ys = jax.lax.scan(step, st0, xs)
+    return ys.transpose(1, 2, 0, 3)
+
+
+def mamba2_chunk_ref(x: Array, b_mat: Array, c_mat: Array,
+                     decay: Array) -> Array:
+    """Mamba2/SSD sequential oracle.
+
+    x: (B, S, H, hd) dt-scaled inputs; b_mat, c_mat: (B, S, ns);
+    decay: (B, S, H) in (0,1].  Returns y (B, S, H, hd), fp32.
+    """
+    bsz, s, h, hd = x.shape
+    ns = b_mat.shape[-1]
+    xf, bf, cf, df = (t.astype(jnp.float32) for t in (x, b_mat, c_mat, decay))
+
+    def step(state, inp):
+        xt, bt, ct, dt = inp
+        state = dt[..., None, None] * state + jnp.einsum(
+            "bhd,bs->bhds", xt, bt)
+        y = jnp.einsum("bhds,bs->bhd", state, ct)
+        return state, y
+
+    st0 = jnp.zeros((bsz, h, hd, ns), jnp.float32)
+    xs = (xf.transpose(1, 0, 2, 3), bf.transpose(1, 0, 2),
+          cf.transpose(1, 0, 2), df.transpose(1, 0, 2))
+    _, ys = jax.lax.scan(step, st0, xs)
+    return ys.transpose(1, 0, 2, 3)

@@ -1,0 +1,33 @@
+"""Production meshes.
+
+A function (not a module-level constant) so importing never touches jax
+device state: the dry-run sets XLA_FLAGS for 512 host devices *before* any
+jax import; smoke tests see the real single device.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 (one v5e pod, 256 chips) or 2x16x16 (two pods, 512 chips).
+
+    Axes: "data" = AMB workers (data parallel / FSDP), "model" =
+    tensor/expert parallel inside a worker, "pod" = the cross-pod worker
+    axis (consensus spans ("pod", "data") jointly).
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int = 2, model: int = 2, *, pod: int = 1):
+    """Small mesh over however many (host) devices exist — tests/examples."""
+    ndev = len(jax.devices())
+    need = data * model * pod
+    if ndev < need:
+        raise RuntimeError(f"need {need} devices, have {ndev} "
+                           f"(set --xla_force_host_platform_device_count)")
+    if pod > 1:
+        return jax.make_mesh((pod, data, model), ("pod", "data", "model"))
+    return jax.make_mesh((data, model), ("data", "model"))

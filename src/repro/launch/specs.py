@@ -1,0 +1,102 @@
+"""ShapeDtypeStruct input stand-ins for every (arch x input-shape) pair.
+
+No device allocation: everything the dry-run lowers against is abstract.
+Audio/VLM frontends are stubbed here per the assignment — ``input_specs``
+provides frame/patch *embeddings* of the right shape instead of raw
+pixels/audio.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs import InputShape
+from ..models import init_decode_state, init_params
+from ..models.common import ArchConfig
+
+SDS = jax.ShapeDtypeStruct
+
+
+def batch_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _nworkers(mesh: Mesh) -> int:
+    return int(np.prod([mesh.shape[a] for a in batch_axes(mesh)]))
+
+
+def _bspec(mesh: Mesh, batch: int, ndim: int) -> P:
+    lead = batch_axes(mesh) if batch % _nworkers(mesh) == 0 else None
+    return P(lead, *([None] * (ndim - 1)))
+
+
+def _sds(mesh: Mesh, shape, dtype, batch_dim0: bool = True) -> SDS:
+    spec = _bspec(mesh, shape[0], len(shape)) if batch_dim0 else P()
+    return SDS(shape, dtype, sharding=NamedSharding(mesh, spec))
+
+
+def train_input_specs(cfg: ArchConfig, shape: InputShape, mesh: Mesh) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    batch: dict[str, Any] = {"labels": _sds(mesh, (b, s), jnp.int32)}
+    if cfg.input_mode == "embeds":
+        batch["embeds"] = _sds(mesh, (b, s, cfg.d_model), cfg.jdtype)
+    else:
+        batch["tokens"] = _sds(mesh, (b, s), jnp.int32)
+    if cfg.family == "audio":
+        enc = cfg.encoder_seq or 1500
+        batch["enc_embeds"] = _sds(mesh, (b, enc, cfg.d_model), cfg.jdtype)
+    return batch
+
+
+def prefill_input_specs(cfg: ArchConfig, shape: InputShape, mesh: Mesh) -> dict:
+    batch = train_input_specs(cfg, shape, mesh)
+    batch.pop("labels")
+    return batch
+
+
+def abstract_params(cfg: ArchConfig):
+    """Param ShapeDtypeStructs via eval_shape (no allocation)."""
+    return jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+
+
+def abstract_decode_state(cfg: ArchConfig, shape: InputShape):
+    return jax.eval_shape(
+        lambda: init_decode_state(cfg, shape.global_batch, shape.seq_len))
+
+
+def decode_state_specs(state_sds, mesh: Mesh, global_batch: int):
+    """Sharding specs for decode state: batch on worker axes, one large
+    inner dim (cache seq / heads / state) on "model" when divisible."""
+    baxes = batch_axes(mesh)
+    n = _nworkers(mesh)
+    msize = mesh.shape["model"]
+
+    def leaf_spec(leaf):
+        shp = leaf.shape
+        if len(shp) <= 1:
+            return P()
+        axes: list = [None] * len(shp)
+        # dim0 is the stacked-layer dim; dim1 is batch.
+        if len(shp) >= 2 and shp[1] == global_batch and global_batch % n == 0:
+            axes[1] = baxes
+        for i in range(2, len(shp)):
+            if shp[i] % msize == 0 and shp[i] >= msize:
+                axes[i] = "model"
+                break
+        return P(*axes)
+
+    return jax.tree.map(leaf_spec, state_sds)
+
+
+def decode_token_spec(shape: InputShape, mesh: Mesh) -> SDS:
+    return _sds(mesh, (shape.global_batch,), jnp.int32)
+
+
+def worker_batch_spec(mesh: Mesh) -> SDS:
+    """b_i(t): per-worker AMB minibatch sizes for this epoch."""
+    return SDS((_nworkers(mesh),), jnp.int32,
+               sharding=NamedSharding(mesh, P(batch_axes(mesh))))

@@ -1,0 +1,8 @@
+"""Model zoo: 10 assigned architectures over one functional core."""
+from .common import ArchConfig
+from .model import (DecodeState, decode_step, forward, init_decode_state,
+                    init_params, lm_loss, logits_fn, param_count, prefill)
+
+__all__ = ["ArchConfig", "DecodeState", "decode_step", "forward",
+           "init_decode_state", "init_params", "lm_loss", "logits_fn",
+           "param_count", "prefill"]

@@ -1,0 +1,218 @@
+"""Architecture configs and shared building blocks for the model zoo."""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+# --------------------------------------------------------------------------
+# Loop unrolling switch.  lax.scan keeps HLO O(1) in trip count — which also
+# means XLA cost_analysis counts scan bodies ONCE.  The dry-run's
+# cost-measurement compiles run under ``unrolled_loops()`` so every layer and
+# every attention/SSM block iteration appears in the HLO explicitly.
+# --------------------------------------------------------------------------
+
+_UNROLL = threading.local()
+
+
+def unroll_active() -> bool:
+    return getattr(_UNROLL, "on", False)
+
+
+@contextlib.contextmanager
+def unrolled_loops(enable: bool = True):
+    old = getattr(_UNROLL, "on", False)
+    _UNROLL.on = enable
+    try:
+        yield
+    finally:
+        _UNROLL.on = old
+
+
+def scan_or_unroll(body, carry, xs, *, checkpoint: bool = False):
+    """lax.scan, or an unrolled python loop under ``unrolled_loops()``.
+
+    ``xs`` may be a pytree of stacked inputs or an integer length (bodies
+    that index closures by iteration count).
+    """
+    fn = jax.checkpoint(body) if checkpoint else body
+    if isinstance(xs, int):
+        length, get = xs, lambda i: i
+        xs_arr = jnp.arange(xs)
+    else:
+        length = jax.tree.leaves(xs)[0].shape[0]
+        get = lambda i: jax.tree.map(lambda t: t[i], xs)
+        xs_arr = xs
+    if not unroll_active():
+        if isinstance(xs, int):
+            return jax.lax.scan(fn, carry, xs_arr)
+        return jax.lax.scan(fn, carry, xs)
+    ys = []
+    for i in range(length):
+        carry, y = fn(carry, get(i))
+        ys.append(y)
+    if ys and jax.tree.leaves(ys[0]):
+        stacked = jax.tree.map(lambda *a: jnp.stack(a), *ys)
+    else:
+        stacked = None
+    return carry, stacked
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    """One assigned architecture (full or reduced/smoke variant)."""
+
+    name: str
+    family: str                     # dense | moe | hybrid | ssm | audio | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0               # 0 -> d_model // num_heads
+    # attention options
+    qk_norm: bool = False
+    qkv_bias: bool = False
+    rope_theta: float = 1_000_000.0
+    sliding_window: int = 0         # 0 = full attention; >0 = SWA width
+    # MoE
+    num_experts: int = 0
+    experts_per_token: int = 0
+    capacity_factor: float = 1.25
+    # SSM / hybrid
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    conv_width: int = 4
+    ssm_chunk: int = 256            # chunk length for SSM/RWKV scans
+    vocab_pad_to: int = 0           # pad embed/unembed vocab dim to this
+                                    # (0 = off) so it shards on the model axis
+    head_pad_to: int = 0            # pad recurrent heads to this count so the
+                                    # per-head state shards head-aligned on the
+                                    # production model axis (rwkv6: 40 -> 48 on
+                                    # a 16-way axis; 0 = off).  Numerically
+                                    # exact: padded channels have r=k=v=0.
+    attn_every: int = 0             # hybrid: shared attn block every k layers
+    # encoder-decoder (audio)
+    encoder_layers: int = 0
+    encoder_seq: int = 0            # stub frontend frames (whisper: 1500)
+    # input modality
+    input_mode: str = "tokens"      # tokens | embeds (vlm/audio frontends stubbed)
+    # numerics
+    dtype: str = "bfloat16"
+    # MXU accumulation policy: bf16-input dots accumulate in f32
+    # (preferred_element_type).  TPU-native; the XLA *CPU* runtime cannot
+    # execute BF16xBF16=F32 dots (compile is fine), so smoke configs — the
+    # only ones executed on CPU — turn it off.  Full configs keep it on:
+    # they are only lowered/compiled (dry-run) or run on real TPUs.
+    mxu_f32_accum: bool = True
+    # attention compute chunking (pure-JAX flash).  (1024, 1024) is the
+    # largest VMEM-valid flash tile (4 MiB f32 scores/block, double-
+    # buffered) and measured best on the train_4k roofline among valid
+    # points (§Perf iteration 5): fewer q-blocks => fewer per-chunk KV
+    # re-gathers and fewer score-chain materialisations.
+    q_chunk: int = 1024
+    kv_chunk: int = 1024
+
+    def acc_dtype(self):
+        """preferred_element_type for bf16 matmuls (None = input dtype)."""
+        import jax.numpy as _jnp
+        return _jnp.float32 if self.mxu_f32_accum else None
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.num_heads
+
+    @property
+    def is_moe(self) -> bool:
+        return self.num_experts > 0
+
+    @property
+    def padded_vocab(self) -> int:
+        """Vocab size of the embed/unembed *parameters*.
+
+        Padding a mesh-indivisible vocab (whisper: 51865 on a 16-way model
+        axis) keeps embed/unembed shardable instead of replicated — which
+        otherwise costs a full unembed read per decoded token (measured
+        ~106 MiB/token; §Perf hillclimb 3).  Logits are sliced back to
+        ``vocab_size``; padded ids are never produced.
+        """
+        return max(self.vocab_pad_to, self.vocab_size)
+
+    @property
+    def is_encdec(self) -> bool:
+        return self.encoder_layers > 0
+
+    @property
+    def jdtype(self):
+        return jnp.dtype(self.dtype)
+
+    def param_count(self) -> int:
+        """Approximate parameter count (embeddings + blocks)."""
+        d, hd = self.d_model, self.hd
+        attn = d * (self.num_heads * hd) * 2 + d * (self.num_kv_heads * hd) * 2
+        if self.family == "ssm":      # rwkv6: attention-free
+            attn = 0
+        if self.is_moe:
+            mlp = self.num_experts * 3 * d * self.d_ff + d * self.num_experts
+        else:
+            mlp = 3 * d * self.d_ff
+        per_layer = attn + mlp + 2 * d
+        if self.family == "ssm":
+            d_in = self.ssm_expand * d
+            per_layer = 4 * d * d + 2 * d * 64 + 3 * d * self.d_ff + 2 * d
+        if self.family == "hybrid":
+            d_in = self.ssm_expand * d
+            per_layer = d * (2 * d_in + 2 * self.ssm_state) + d_in * d + 2 * d
+        emb = self.vocab_size * d * 2   # embed + unembed (untied)
+        total = self.num_layers * per_layer + emb
+        if self.is_encdec:
+            total += self.encoder_layers * (attn + mlp + 2 * d)
+        if self.family == "hybrid" and self.attn_every:
+            total += attn + 3 * d * self.d_ff   # one shared block
+        return int(total)
+
+
+# ---------------------------------------------------------------------------
+# Primitive layers (pure functions over param dicts)
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: Array, scale: Array, eps: float = 1e-6) -> Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * scale.astype(jnp.float32)).astype(dt)
+
+
+def rope_freqs(hd: int, theta: float) -> Array:
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+
+
+def apply_rope(x: Array, positions: Array, theta: float) -> Array:
+    """x: (..., S, H, hd); positions: (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                        # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(angles)[..., None, :]                  # (..., S, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def swiglu(x: Array, w_gate: Array, w_up: Array, w_down: Array) -> Array:
+    g = jax.nn.silu(x @ w_gate)
+    return (g * (x @ w_up)) @ w_down
+
+
+def init_linear(key: Array, shape, dtype, scale: Optional[float] = None) -> Array:
+    fan_in = shape[-2] if len(shape) >= 2 else shape[0]
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(fan_in)
+    return (scale * jax.random.truncated_normal(
+        key, -2.0, 2.0, shape, jnp.float32)).astype(dtype)

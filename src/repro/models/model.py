@@ -1,0 +1,630 @@
+"""Model assembly: init, training forward/loss, prefill, one-token decode.
+
+One code path serves all 10 assigned architectures, keyed by
+``ArchConfig.family``:
+
+  dense / vlm      decoder-only transformer (GQA, optional qk_norm/bias/SWA)
+  moe              dense attention + top-k MoE FFN
+  ssm              RWKV6 time-mix + channel-mix (attention-free)
+  hybrid           Mamba2 backbone + a *shared* attention block every k layers
+                   (Zamba2 pattern)
+  audio            whisper-style encoder-decoder (frontend stubbed: encoder
+                   consumes precomputed frame embeddings)
+
+Homogeneous stacks are ``lax.scan``-ed over stacked params (keeps HLO size
+O(1) in depth — critical for the 80-compile dry-run matrix) with
+``jax.checkpoint`` per block for training memory.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import functools
+import threading
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..dist.sharding import constrain
+from . import attention as attn
+from . import moe as moe_mod
+from . import ssm as ssm_mod
+from .common import ArchConfig, init_linear, rms_norm, swiglu
+
+Array = jax.Array
+
+# --------------------------------------------------------------------------
+# Layer-stack iteration: lax.scan normally (O(1) HLO in depth), or an
+# unrolled python loop under ``unrolled_layers()`` — used by the dry-run's
+# cost-extrapolation compiles, because XLA cost_analysis counts while-loop
+# bodies exactly once regardless of trip count.
+# --------------------------------------------------------------------------
+
+from .common import scan_or_unroll as scan_layers  # noqa: E402
+from .common import unrolled_loops as unrolled_layers  # noqa: E402
+
+
+# ---------------------------------------------------------------------------
+# Parameter construction
+# ---------------------------------------------------------------------------
+
+def _mlp_params(key: Array, cfg: ArchConfig) -> dict:
+    ks = jax.random.split(key, 3)
+    d, ff = cfg.d_model, cfg.d_ff
+    return {
+        "w_gate": init_linear(ks[0], (d, ff), cfg.jdtype),
+        "w_up": init_linear(ks[1], (d, ff), cfg.jdtype),
+        "w_down": init_linear(ks[2], (ff, d), cfg.jdtype),
+    }
+
+
+def _dense_block_params(key: Array, cfg: ArchConfig) -> dict:
+    k1, k2 = jax.random.split(key)
+    p = {
+        "ln1": jnp.ones((cfg.d_model,), jnp.float32),
+        "attn": attn.attention_params(k1, cfg),
+        "ln2": jnp.ones((cfg.d_model,), jnp.float32),
+    }
+    if cfg.is_moe:
+        p["moe"] = moe_mod.moe_params(k2, cfg)
+    else:
+        p["mlp"] = _mlp_params(k2, cfg)
+    return p
+
+
+def _rwkv_block_params(key: Array, cfg: ArchConfig) -> dict:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    d, ff = cfg.d_model, cfg.d_ff
+    return {
+        "ln1": jnp.ones((d,), jnp.float32),
+        "tmix": ssm_mod.rwkv6_params(k1, cfg),
+        "ln2": jnp.ones((d,), jnp.float32),
+        "cmix": {
+            "mu": 0.5 * jnp.ones((2, d), cfg.jdtype),
+            "w_k": init_linear(k2, (d, ff), cfg.jdtype),
+            "w_v": init_linear(k3, (ff, d), cfg.jdtype),
+            "w_r": init_linear(k4, (d, d), cfg.jdtype),
+        },
+    }
+
+
+def _mamba_block_params(key: Array, cfg: ArchConfig) -> dict:
+    return {
+        "ln1": jnp.ones((cfg.d_model,), jnp.float32),
+        "mamba": ssm_mod.mamba2_params(key, cfg),
+    }
+
+
+def _encdec_dec_block_params(key: Array, cfg: ArchConfig) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "ln1": jnp.ones((cfg.d_model,), jnp.float32),
+        "attn": attn.attention_params(k1, cfg),
+        "ln_x": jnp.ones((cfg.d_model,), jnp.float32),
+        "xattn": attn.attention_params(k2, cfg, cross=True),
+        "ln2": jnp.ones((cfg.d_model,), jnp.float32),
+        "mlp": _mlp_params(k3, cfg),
+    }
+
+
+def _block_param_fn(cfg: ArchConfig):
+    return {
+        "dense": _dense_block_params,
+        "moe": _dense_block_params,
+        "vlm": _dense_block_params,
+        "ssm": _rwkv_block_params,
+        "hybrid": _mamba_block_params,
+        "audio": _encdec_dec_block_params,
+    }[cfg.family]
+
+
+def init_params(key: Array, cfg: ArchConfig) -> dict:
+    keys = jax.random.split(key, 8)
+    block_fn = _block_param_fn(cfg)
+    layer_keys = jax.random.split(keys[0], cfg.num_layers)
+    blocks = jax.vmap(lambda k: block_fn(k, cfg))(layer_keys)
+
+    params: dict[str, Any] = {
+        "embed": init_linear(keys[1], (cfg.padded_vocab, cfg.d_model),
+                             cfg.jdtype, scale=1.0),
+        "unembed": init_linear(keys[2], (cfg.d_model, cfg.padded_vocab),
+                               cfg.jdtype),
+        "final_norm": jnp.ones((cfg.d_model,), jnp.float32),
+        "blocks": blocks,
+    }
+    if cfg.family == "hybrid" and cfg.attn_every:
+        params["shared_attn"] = _dense_block_params(keys[3], cfg)
+    if cfg.is_encdec:
+        enc_keys = jax.random.split(keys[4], cfg.encoder_layers)
+        params["encoder"] = {
+            "blocks": jax.vmap(lambda k: _dense_block_params(k, cfg))(enc_keys),
+            "final_norm": jnp.ones((cfg.d_model,), jnp.float32),
+        }
+    return params
+
+
+def param_count(params) -> int:
+    return sum(int(x.size) for x in jax.tree.leaves(params))
+
+
+# ---------------------------------------------------------------------------
+# Block forward (training / prefill)
+# ---------------------------------------------------------------------------
+
+def _dense_block_fwd(p: dict, x: Array, positions: Array, cfg: ArchConfig,
+                     *, causal: bool = True) -> tuple[Array, Array]:
+    window = cfg.sliding_window
+    h = attn.attend_train(p["attn"], rms_norm(x, p["ln1"]), positions, cfg,
+                          causal=causal, window=window)
+    x = x + h
+    x = constrain(x, "batch", "seq", None)
+    aux = jnp.float32(0.0)
+    if cfg.is_moe:
+        h, aux = moe_mod.moe_forward(p["moe"], rms_norm(x, p["ln2"]), cfg)
+    else:
+        mp = p["mlp"]
+        h = swiglu(rms_norm(x, p["ln2"]), mp["w_gate"], mp["w_up"],
+                   mp["w_down"])
+    x = x + h
+    return constrain(x, "batch", "seq", None), aux
+
+
+def _rwkv_block_fwd(p: dict, x: Array, cfg: ArchConfig) -> Array:
+    x = x + ssm_mod.rwkv6_forward(p["tmix"], rms_norm(x, p["ln1"]), cfg)
+    x = constrain(x, "batch", "seq", None)
+    xn = rms_norm(x, p["ln2"])
+    cm = p["cmix"]
+    xp = jnp.pad(xn, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    k_in = xn * cm["mu"][0] + xp * (1 - cm["mu"][0])
+    r_in = xn * cm["mu"][1] + xp * (1 - cm["mu"][1])
+    v = jnp.square(jax.nn.relu(k_in @ cm["w_k"])) @ cm["w_v"]
+    x = x + jax.nn.sigmoid(r_in @ cm["w_r"]) * v
+    return constrain(x, "batch", "seq", None)
+
+
+def _mamba_block_fwd(p: dict, x: Array, cfg: ArchConfig) -> Array:
+    x = x + ssm_mod.mamba2_forward(p["mamba"], rms_norm(x, p["ln1"]), cfg)
+    return constrain(x, "batch", "seq", None)
+
+
+def _encdec_dec_block_fwd(p: dict, x: Array, positions: Array, enc_out: Array,
+                          cfg: ArchConfig) -> Array:
+    h = attn.attend_train(p["attn"], rms_norm(x, p["ln1"]), positions, cfg,
+                          causal=True, window=cfg.sliding_window)
+    x = x + h
+    h = attn.attend_train(p["xattn"], rms_norm(x, p["ln_x"]), positions, cfg,
+                          causal=False, kv_input=enc_out, rope=False)
+    x = x + h
+    mp = p["mlp"]
+    x = x + swiglu(rms_norm(x, p["ln2"]), mp["w_gate"], mp["w_up"],
+                   mp["w_down"])
+    return constrain(x, "batch", "seq", None)
+
+
+# ---------------------------------------------------------------------------
+# Full forward (training) -> logits
+# ---------------------------------------------------------------------------
+
+def _embed(params, cfg: ArchConfig, batch: dict) -> Array:
+    if "embeds" in batch:
+        x = batch["embeds"].astype(cfg.jdtype)
+    else:
+        x = params["embed"][batch["tokens"]]
+    return constrain(x, "batch", "seq", None)
+
+
+def _encoder_forward(params, cfg: ArchConfig, enc_embeds: Array) -> Array:
+    x = constrain(enc_embeds.astype(cfg.jdtype), "batch", None, None)
+    positions = jnp.arange(x.shape[1])[None, :]
+
+    def body(x, bp):
+        x, _ = _dense_block_fwd(bp, x, positions, cfg, causal=False)
+        return x, None
+
+    x, _ = scan_layers(body, x, params["encoder"]["blocks"],
+                       checkpoint=True)
+    return rms_norm(x, params["encoder"]["final_norm"])
+
+
+def forward(params, cfg: ArchConfig, batch: dict) -> tuple[Array, Array]:
+    """Training/prefill forward. Returns (hidden (B,S,d), aux_loss)."""
+    x = _embed(params, cfg, batch)
+    b, s, _ = x.shape
+    positions = jnp.arange(s)[None, :]
+
+    if cfg.family == "audio":
+        enc_out = _encoder_forward(params, cfg, batch["enc_embeds"])
+
+        def body(x, bp):
+            return _encdec_dec_block_fwd(bp, x, positions, enc_out, cfg), None
+
+        x, _ = scan_layers(body, x, params["blocks"], checkpoint=True)
+        aux = jnp.float32(0.0)
+
+    elif cfg.family == "hybrid":
+        shared = params.get("shared_attn")
+        every = cfg.attn_every or (cfg.num_layers + 1)
+
+        def body(carry, inp):
+            x = carry
+            i, bp = inp
+            x = _mamba_block_fwd(bp, x, cfg)
+            if shared is not None:
+                def with_attn(x):
+                    y, _ = _dense_block_fwd(shared, x, positions, cfg)
+                    return y
+                x = jax.lax.cond((i + 1) % every == 0, with_attn,
+                                 lambda x: x, x)
+            return x, None
+
+        idx = jnp.arange(cfg.num_layers)
+        x, _ = scan_layers(body, x, (idx, params["blocks"]), checkpoint=True)
+        aux = jnp.float32(0.0)
+
+    elif cfg.family == "ssm":
+        def body(x, bp):
+            return _rwkv_block_fwd(bp, x, cfg), None
+
+        x, _ = scan_layers(body, x, params["blocks"], checkpoint=True)
+        aux = jnp.float32(0.0)
+
+    else:  # dense / moe / vlm
+        def body(carry, bp):
+            x, aux = carry
+            x, a = _dense_block_fwd(bp, x, positions, cfg)
+            return (x, aux + a), None
+
+        (x, aux), _ = scan_layers(body, (x, jnp.float32(0.0)),
+                                  params["blocks"], checkpoint=True)
+
+    return rms_norm(x, params["final_norm"]), aux
+
+
+def logits_fn(params, cfg: ArchConfig, hidden: Array) -> Array:
+    logits = hidden @ params["unembed"]
+    logits = constrain(logits, "batch", None, "vocab")
+    if cfg.padded_vocab != cfg.vocab_size:
+        logits = logits[..., :cfg.vocab_size]
+    return logits
+
+
+def lm_loss(params, cfg: ArchConfig, batch: dict,
+            seq_weights: Optional[Array] = None) -> tuple[Array, dict]:
+    """Next-token cross-entropy.
+
+    ``seq_weights`` (B,) implements AMB's variable minibatch: per-sequence
+    inclusion weights (0/1 mask from b_i(t)); the loss is the weighted mean
+    over included sequences, so its gradient equals the paper's eq. (4)
+    weighted consensus in the exact-averaging limit.
+    """
+    hidden, aux = forward(params, cfg, batch)
+    logits = logits_fn(params, cfg, hidden).astype(jnp.float32)
+    labels = batch["labels"]
+    mask = (labels >= 0).astype(jnp.float32)
+    labels = jnp.maximum(labels, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    tok_nll = (logz - gold) * mask                       # (B, S)
+    if seq_weights is not None:
+        w = seq_weights[:, None].astype(jnp.float32)
+        denom = jnp.maximum((mask * w).sum(), 1.0)
+        loss = (tok_nll * w).sum() / denom
+    else:
+        denom = jnp.maximum(mask.sum(), 1.0)
+        loss = tok_nll.sum() / denom
+    total = loss + 0.01 * aux
+    return total, {"loss": loss, "aux": aux, "ntok": denom}
+
+
+# ---------------------------------------------------------------------------
+# Prefill: forward + decode-ready caches
+# ---------------------------------------------------------------------------
+
+def _ring_from_linear(k: Array, cap: int) -> Array:
+    """Arrange the last ``cap`` positions of (B, S, ...) into ring slots."""
+    s = k.shape[1]
+    if s <= cap:
+        pad = cap - s
+        return jnp.pad(k, ((0, 0), (0, pad)) + ((0, 0),) * (k.ndim - 2))
+    last = k[:, s - cap:]
+    slots = (jnp.arange(s - cap, s)) % cap
+    out = jnp.zeros((k.shape[0], cap) + k.shape[2:], k.dtype)
+    return out.at[:, slots].set(last)
+
+
+def prefill(params, cfg: ArchConfig, batch: dict,
+            extra_capacity: int = 0) -> tuple[Array, "DecodeState"]:
+    """Process a full prompt; returns (last-token logits (B,V), DecodeState).
+
+    The returned state is ready for ``decode_step`` at position S.  Attention
+    caches are ring buffers of width ``sliding_window`` when SWA is active;
+    linear caches get ``extra_capacity`` empty slots for subsequent decode.
+    """
+    x = _embed(params, cfg, batch)
+    b, s, _ = x.shape
+    positions = jnp.arange(s)[None, :]
+    window = cfg.sliding_window
+    ring = window > 0
+    cap = min(window, s) if ring else s
+    enc_kv = None
+
+    def pack(kv):
+        k, v = kv
+        if ring:
+            k, v = _ring_from_linear(k, cap), _ring_from_linear(v, cap)
+        elif extra_capacity:
+            padw = ((0, 0), (0, extra_capacity), (0, 0), (0, 0))
+            k, v = jnp.pad(k, padw), jnp.pad(v, padw)
+        return attn.KVCache(k, v, ring)
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        def body(x, bp):
+            h, kv = attn.attend_train(
+                bp["attn"], rms_norm(x, bp["ln1"]), positions, cfg,
+                causal=True, window=window, return_kv=True)
+            x = x + h
+            x = constrain(x, "batch", "seq", None)
+            if cfg.is_moe:
+                h, _ = moe_mod.moe_forward(bp["moe"], rms_norm(x, bp["ln2"]),
+                                           cfg)
+            else:
+                mp = bp["mlp"]
+                h = swiglu(rms_norm(x, bp["ln2"]), mp["w_gate"], mp["w_up"],
+                           mp["w_down"])
+            return constrain(x + h, "batch", "seq", None), pack(kv)
+
+        x, caches = scan_layers(body, x, params["blocks"])
+
+    elif cfg.family == "ssm":
+        def body(x, bp):
+            xn = rms_norm(x, bp["ln1"])
+            h, tmix = ssm_mod.rwkv6_forward(bp["tmix"], xn, cfg,
+                                            return_state=True)
+            x = x + h
+            x = constrain(x, "batch", "seq", None)
+            xn2 = rms_norm(x, bp["ln2"])
+            cm = bp["cmix"]
+            xp = jnp.pad(xn2, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+            k_in = xn2 * cm["mu"][0] + xp * (1 - cm["mu"][0])
+            r_in = xn2 * cm["mu"][1] + xp * (1 - cm["mu"][1])
+            v = jnp.square(jax.nn.relu(k_in @ cm["w_k"])) @ cm["w_v"]
+            x = x + jax.nn.sigmoid(r_in @ cm["w_r"]) * v
+            return (constrain(x, "batch", "seq", None),
+                    {"tmix": tmix, "cmix_prev": xn2[:, -1]})
+
+        x, caches = scan_layers(body, x, params["blocks"])
+
+    elif cfg.family == "hybrid":
+        shared = params.get("shared_attn")
+        every = cfg.attn_every or (cfg.num_layers + 1)
+        cap_eff = cap if ring else cap + extra_capacity
+        zero_kv = (jnp.zeros((b, cap_eff, cfg.num_kv_heads, cfg.hd),
+                             cfg.jdtype),) * 2
+
+        def body(x, inp):
+            i, bp = inp
+            h, st = ssm_mod.mamba2_forward(
+                bp["mamba"], rms_norm(x, bp["ln1"]), cfg, return_state=True)
+            x = constrain(x + h, "batch", "seq", None)
+            if shared is not None:
+                def with_attn(x):
+                    h, kv = attn.attend_train(
+                        shared["attn"], rms_norm(x, shared["ln1"]),
+                        positions, cfg, window=window, return_kv=True)
+                    x = x + h
+                    mp = shared["mlp"]
+                    x = x + swiglu(rms_norm(x, shared["ln2"]), mp["w_gate"],
+                                   mp["w_up"], mp["w_down"])
+                    c = pack(kv)
+                    return x, (c.k, c.v)
+                def without(x):
+                    return x, zero_kv
+                x, kv = jax.lax.cond((i + 1) % every == 0, with_attn,
+                                     without, x)
+            else:
+                kv = zero_kv
+            return x, (st, kv)
+
+        idx = jnp.arange(cfg.num_layers)
+        x, (states, kvs) = scan_layers(body, x, (idx, params["blocks"]))
+        napp = (cfg.num_layers // every) if shared is not None else 0
+        attn_rows = [i for i in range(cfg.num_layers) if (i + 1) % every == 0]
+        if napp:
+            sel = jnp.asarray(attn_rows)
+            caches = {"mamba": states,
+                      "attn": attn.KVCache(kvs[0][sel], kvs[1][sel], ring)}
+        else:
+            caches = {"mamba": states,
+                      "attn": attn.KVCache(kvs[0][:1], kvs[1][:1], ring)}
+
+    elif cfg.family == "audio":
+        enc_out = _encoder_forward(params, cfg, batch["enc_embeds"])
+
+        def body(x, bp):
+            h, kv = attn.attend_train(
+                bp["attn"], rms_norm(x, bp["ln1"]), positions, cfg,
+                causal=True, window=window, return_kv=True)
+            x = x + h
+            hx, xkv = attn.attend_train(
+                bp["xattn"], rms_norm(x, bp["ln_x"]), positions, cfg,
+                causal=False, kv_input=enc_out, rope=False, return_kv=True)
+            x = x + hx
+            mp = bp["mlp"]
+            x = x + swiglu(rms_norm(x, bp["ln2"]), mp["w_gate"], mp["w_up"],
+                           mp["w_down"])
+            return constrain(x, "batch", "seq", None), (pack(kv), xkv)
+
+        x, (caches, xkvs) = scan_layers(body, x, params["blocks"])
+        enc_kv = xkvs
+    else:
+        raise ValueError(cfg.family)
+
+    hidden = rms_norm(x[:, -1:], params["final_norm"])
+    logits = (hidden @ params["unembed"])[:, 0]
+    if cfg.padded_vocab != cfg.vocab_size:
+        logits = logits[..., :cfg.vocab_size]
+    logits = constrain(logits, "batch", "vocab")
+    return logits, DecodeState(caches, jnp.int32(s), enc_kv)
+
+
+# ---------------------------------------------------------------------------
+# Decode (serve_step)
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_node_class
+class DecodeState:
+    """Per-model decode state: per-layer caches/SSM states + position."""
+
+    def __init__(self, caches, pos, enc_kv=None):
+        self.caches, self.pos, self.enc_kv = caches, pos, enc_kv
+
+    def tree_flatten(self):
+        return (self.caches, self.pos, self.enc_kv), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def init_decode_state(cfg: ArchConfig, batch: int, cache_len: int) -> DecodeState:
+    """Allocate decode state for a context of ``cache_len`` tokens.
+
+    Attention caches are ring buffers of size ``sliding_window`` when SWA is
+    on (O(window) memory at 500k context), else linear of size cache_len.
+    """
+    l = cfg.num_layers
+    ring = cfg.sliding_window > 0
+    cap = min(cfg.sliding_window, cache_len) if ring else cache_len
+
+    def stack(make_one):
+        return jax.tree.map(lambda *xs: jnp.stack(xs),
+                            *[make_one() for _ in range(l)])
+
+    enc_kv = None
+    if cfg.family in ("dense", "moe", "vlm"):
+        caches = stack(lambda: attn.init_cache(cfg, batch, cap, ring=ring))
+    elif cfg.family == "ssm":
+        caches = stack(lambda: {
+            "tmix": ssm_mod.rwkv6_init_state(cfg, batch),
+            "cmix_prev": jnp.zeros((batch, cfg.d_model), cfg.jdtype)})
+    elif cfg.family == "hybrid":
+        napp = (cfg.num_layers // cfg.attn_every) if cfg.attn_every else 0
+        caches = {
+            "mamba": stack(lambda: ssm_mod.mamba2_init_state(cfg, batch)),
+            "attn": jax.tree.map(
+                lambda *xs: jnp.stack(xs),
+                *[attn.init_cache(cfg, batch, cap, ring=ring)
+                  for _ in range(max(napp, 1))]),
+        }
+    elif cfg.family == "audio":
+        caches = stack(lambda: attn.init_cache(cfg, batch, cap, ring=ring))
+        enc = cfg.encoder_seq or 1500
+        kvshape = (l, batch, enc, cfg.num_kv_heads, cfg.hd)
+        enc_kv = (jnp.zeros(kvshape, cfg.jdtype), jnp.zeros(kvshape, cfg.jdtype))
+    else:
+        raise ValueError(cfg.family)
+    return DecodeState(caches, jnp.zeros((), jnp.int32), enc_kv)
+
+
+def decode_step(params, cfg: ArchConfig, state: DecodeState,
+                token: Array) -> tuple[Array, DecodeState]:
+    """One-token decode. token: (B,) int32 -> logits (B, V)."""
+    x = params["embed"][token][:, None, :]               # (B,1,d)
+    x = constrain(x, "batch", None, None)
+    pos = state.pos
+    w = cfg.sliding_window
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        def body(x, inp):
+            bp, cache = inp
+            h, new_cache = attn.decode_attend(
+                bp["attn"], rms_norm(x, bp["ln1"]), pos, cache, cfg, window=w)
+            x = x + h
+            if cfg.is_moe:
+                h, _ = moe_mod.moe_forward(bp["moe"], rms_norm(x, bp["ln2"]),
+                                           cfg)
+            else:
+                mp = bp["mlp"]
+                h = swiglu(rms_norm(x, bp["ln2"]), mp["w_gate"], mp["w_up"],
+                           mp["w_down"])
+            return x + h, new_cache
+
+        x, new_caches = scan_layers(body, x, (params["blocks"], state.caches))
+
+    elif cfg.family == "ssm":
+        def body(x, inp):
+            bp, st = inp
+            h, tmix_new = ssm_mod.rwkv6_decode(
+                bp["tmix"], rms_norm(x, bp["ln1"]), st["tmix"], cfg)
+            x = x + h
+            xn = rms_norm(x, bp["ln2"])
+            cm = bp["cmix"]
+            xp = st["cmix_prev"][:, None, :]
+            k_in = xn * cm["mu"][0] + xp * (1 - cm["mu"][0])
+            r_in = xn * cm["mu"][1] + xp * (1 - cm["mu"][1])
+            v = jnp.square(jax.nn.relu(k_in @ cm["w_k"])) @ cm["w_v"]
+            x = x + jax.nn.sigmoid(r_in @ cm["w_r"]) * v
+            return x, {"tmix": tmix_new, "cmix_prev": xn[:, 0]}
+
+        x, new_caches = scan_layers(body, x, (params["blocks"], state.caches))
+
+    elif cfg.family == "hybrid":
+        shared = params.get("shared_attn")
+        every = cfg.attn_every or (cfg.num_layers + 1)
+        mamba_states = state.caches["mamba"]
+        attn_caches = state.caches["attn"]
+        new_mamba, new_attn = [], []
+        app = 0
+        for i in range(cfg.num_layers):
+            bp = jax.tree.map(lambda t, i=i: t[i], params["blocks"])
+            st = jax.tree.map(lambda t, i=i: t[i], mamba_states)
+            h, st_new = ssm_mod.mamba2_decode(
+                bp["mamba"], rms_norm(x, bp["ln1"]), st, cfg)
+            x = x + h
+            new_mamba.append(st_new)
+            if shared is not None and (i + 1) % every == 0:
+                cache = jax.tree.map(lambda t, a=app: t[a], attn_caches)
+                h, cache_new = attn.decode_attend(
+                    shared["attn"], rms_norm(x, shared["ln1"]), pos, cache,
+                    cfg, window=w)
+                x = x + h
+                mp = shared["mlp"]
+                x = x + swiglu(rms_norm(x, shared["ln2"]), mp["w_gate"],
+                               mp["w_up"], mp["w_down"])
+                new_attn.append(cache_new)
+                app += 1
+        new_caches = {
+            "mamba": jax.tree.map(lambda *xs: jnp.stack(xs), *new_mamba),
+            "attn": (jax.tree.map(lambda *xs: jnp.stack(xs), *new_attn)
+                     if new_attn else attn_caches),
+        }
+
+    elif cfg.family == "audio":
+        enc_k, enc_v = state.enc_kv
+
+        def body(x, inp):
+            bp, cache, ek, ev = inp
+            h, new_cache = attn.decode_attend(
+                bp["attn"], rms_norm(x, bp["ln1"]), pos, cache, cfg, window=w)
+            x = x + h
+            h, _ = attn.decode_attend(
+                bp["xattn"], rms_norm(x, bp["ln_x"]), pos, cache, cfg,
+                cross_kv=(ek, ev))
+            x = x + h
+            mp = bp["mlp"]
+            x = x + swiglu(rms_norm(x, bp["ln2"]), mp["w_gate"], mp["w_up"],
+                           mp["w_down"])
+            return x, new_cache
+
+        x, new_caches = scan_layers(
+            body, x, (params["blocks"], state.caches, enc_k, enc_v))
+    else:
+        raise ValueError(cfg.family)
+
+    hidden = rms_norm(x, params["final_norm"])           # (B,1,d)
+    logits = (hidden @ params["unembed"])[:, 0]
+    if cfg.padded_vocab != cfg.vocab_size:
+        logits = logits[..., :cfg.vocab_size]
+    logits = constrain(logits, "batch", "vocab")
+    return logits, DecodeState(new_caches, pos + 1, state.enc_kv)

@@ -1,0 +1,153 @@
+"""Top-k mixture-of-experts layer with grouped, capacity-bounded dispatch.
+
+Dispatch is the GShard/Switch *grouped* pattern adapted for TPU expert
+parallelism: tokens are dispatched **locally per sequence** (the group) —
+argsort by expert id within the sequence, rank-within-expert, scatter into a
+per-group (E, C_g, d) buffer.  The buffer's group dim is batch-sharded
+("data") and its expert dim is expert-sharded ("model"), so XLA lowers the
+group->expert exchange to the canonical all-to-all between the two mesh
+axes.
+
+Why grouped: a *global* argsort over (global_batch x seq x k) token
+assignments is unshardable — the SPMD partitioner replicates the entire
+dispatch computation on every chip (measured: 64 GiB f32 gathers per chip
+per layer on qwen3-moe train_4k; EXPERIMENTS.md §Perf iteration 2).  Local
+per-sequence sort keeps every dispatch tensor at per-chip shapes and is the
+standard production choice; the cost is per-group capacity (more drops under
+cross-sequence imbalance), covered by `capacity_factor`.
+
+The router's load-balance auxiliary loss participates in the same AMB
+weighted gradient consensus as the main loss.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..dist.sharding import constrain
+from .common import ArchConfig, init_linear
+
+Array = jax.Array
+
+
+def moe_params(key: Array, cfg: ArchConfig) -> dict:
+    d, ff, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    ks = jax.random.split(key, 4)
+    return {
+        "router": init_linear(ks[0], (d, e), jnp.float32),
+        "w_gate": init_linear(ks[1], (e, d, ff), cfg.jdtype),
+        "w_up": init_linear(ks[2], (e, d, ff), cfg.jdtype),
+        "w_down": init_linear(ks[3], (e, ff, d), cfg.jdtype),
+    }
+
+
+def _dispatch_group(xg: Array, idx: Array, keep_dtype, e: int, k: int,
+                    cap: int):
+    """Per-group dispatch: xg (S, d), idx (S, k) -> buf (e, cap, d) + meta."""
+    s = xg.shape[0]
+    flat_e = idx.reshape(-1)                                   # (S*k,)
+    order = jnp.argsort(flat_e)                                # stable
+    sorted_e = flat_e[order]
+    arange = jnp.arange(s * k)
+    seg_start = jnp.full((e,), s * k, jnp.int32).at[sorted_e].min(
+        arange.astype(jnp.int32), mode="drop")
+    rank = arange - seg_start[sorted_e]                        # (S*k,)
+    keep = rank < cap
+    token_of = order // k
+    slot_of = order % k
+
+    buf = jnp.zeros((e, cap, xg.shape[-1]), keep_dtype)
+    buf = buf.at[sorted_e, jnp.where(keep, rank, 0)].add(
+        jnp.where(keep[:, None], xg[token_of], 0.0).astype(keep_dtype),
+        mode="drop")
+    return buf, (sorted_e, rank, keep, token_of, slot_of)
+
+
+def _combine_group(y: Array, gate: Array, meta, s: int) -> Array:
+    """Per-group combine: y (e, cap, d) -> (S, d)."""
+    sorted_e, rank, keep, token_of, slot_of = meta
+    gathered = y[sorted_e, jnp.where(keep, rank, 0)]           # (S*k, d)
+    gathered = jnp.where(keep[:, None], gathered, 0.0)
+    w = gate[token_of, slot_of][:, None].astype(y.dtype)       # (S*k, 1)
+    return jnp.zeros((s, y.shape[-1]), y.dtype).at[token_of].add(
+        gathered * w)
+
+
+def moe_forward(p: dict, x: Array, cfg: ArchConfig) -> tuple[Array, Array]:
+    """x: (B, S, d) -> (out (B, S, d), aux load-balance loss scalar)."""
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.experts_per_token
+
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32),
+                        p["router"])                           # (B, S, e)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, idx = jax.lax.top_k(probs, k)                        # (B, S, k)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    # Load-balance aux loss (Switch): e * sum_e f_e * p_e, global stats
+    me = probs.mean((0, 1))                                    # (e,)
+    ce = jnp.zeros((e,), jnp.float32).at[idx.reshape(-1)].add(
+        1.0) / (b * s * k)
+    aux = e * jnp.sum(me * ce)
+
+    # --- grouped local dispatch ---
+    # Group size: per-sequence for training/prefill; for decode (s=1) a
+    # per-sequence group would allocate e*cap buffer slots for only k
+    # assignments (measured 16x padded-compute waste on decode_32k), so
+    # groups coarsen to >=64 tokens while staying aligned with the "data"
+    # batch shards (G divides B, groups never straddle shard boundaries).
+    tokens = b * s
+    groups = b
+    while groups > 16 and tokens // groups < 64 and groups % 2 == 0:
+        groups //= 2
+    if tokens // groups < 64:
+        # Decode scale (e.g. B=128, S=1): grouped dispatch would pit the
+        # group dim and the expert weights' FSDP dim against each other on
+        # "data" and force per-token expert-weight all-gathers (measured
+        # collective 0.0086 -> 0.15 s).  A single replicated-dispatch
+        # group over so few tokens is cheap and lets the expert einsum
+        # partial-sum against the weights' sharding — the global-dispatch
+        # behaviour, which is only pathological at training scale.
+        groups = 1
+    tg = tokens // groups                                      # tokens/group
+    xg = x.reshape(groups, tg, d)
+    idx_g = idx.reshape(groups, tg, k)
+
+    cap = int(max(1, round(cfg.capacity_factor * tg * k / e)))
+    buf, meta = jax.vmap(
+        lambda xgi, igi: _dispatch_group(xgi, igi, x.dtype, e, k, cap)
+    )(xg, idx_g)                                               # (G, e, cap, d)
+    if groups > 1:
+        # group dim on "data", expert dim on "model": the constraint makes
+        # XLA emit the group->expert all-to-all here (and its inverse at
+        # combine).  At groups == 1 (decode) leave the layout free: pinning
+        # it blocks the partitioner's partial-sum strategy against the
+        # FSDP-sharded expert weights and forces weight all-gathers.
+        buf = constrain(buf, "batch", "expert", None, None)
+
+    # expert computation, batched over groups x experts (MXU f32 accum on
+    # TPU; plain bf16 dots on CPU-executed smoke configs)
+    acc = cfg.acc_dtype()
+
+    def ein(sub, a, b_):
+        if acc is not None:
+            return jnp.einsum(sub, a, b_, preferred_element_type=acc)
+        return jnp.einsum(sub, a, b_)
+    g = jax.nn.silu(ein("becd,edf->becf", buf, p["w_gate"]))
+    u = ein("becd,edf->becf", buf, p["w_up"])
+    y = ein("becf,efd->becd", (g * u).astype(buf.dtype),
+            p["w_down"]).astype(x.dtype)
+    # NOTE (§Perf iteration 3, REFUTED): explicitly re-laying y out to
+    # group-local (P(batch, None, ...)) before the combine gather was
+    # predicted to replace the partitioner's f32 (B, S*k, d) all-gathers
+    # with one bf16 all-to-all; measured collective went UP 30.0 -> 37.3 s
+    # (the partitioner's own choice CSEs the re-layout with the backward).
+    # Keep the expert-sharded layout and let SPMD place the exchange.
+    if groups > 1:
+        y = constrain(y, "batch", "expert", None, None)
+
+    gate_g = gate.reshape(groups, tg, k)
+    out = jax.vmap(lambda yg, gg, mt: _combine_group(yg, gg, mt, tg)
+                   )(y, gate_g, meta)                          # (G, tg, d)
+    out = out.reshape(b, s, d)
+    return constrain(out, "batch", None, None), aux

@@ -1,0 +1,373 @@
+"""Sequence-state models: Mamba2 (SSD) and RWKV6 ("Finch") blocks.
+
+Both are implemented twice:
+  * chunked parallel form for training / prefill (lax.scan over chunks with a
+    matmul-heavy intra-chunk computation — the TPU-friendly formulation; the
+    Pallas kernel in ``repro/kernels/rwkv6_scan`` implements the same chunk
+    step for VMEM), and
+  * O(1)-state recurrent step for decode (``*_decode``), which is what makes
+    ``long_500k`` native for these families.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import ArchConfig, init_linear, scan_or_unroll
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 (SSD, scalar-per-head decay)
+# ---------------------------------------------------------------------------
+
+def mamba2_dims(cfg: ArchConfig):
+    d_in = cfg.ssm_expand * cfg.d_model
+    hd = 64
+    heads = d_in // hd
+    return d_in, heads, hd
+
+
+def mamba2_params(key: Array, cfg: ArchConfig) -> dict:
+    d = cfg.d_model
+    d_in, heads, hd = mamba2_dims(cfg)
+    ns = cfg.ssm_state
+    ks = jax.random.split(key, 6)
+    return {
+        # projections: x, z (gate), B, C, dt
+        "w_in": init_linear(ks[0], (d, 2 * d_in + 2 * ns + heads), cfg.jdtype),
+        "conv_w": init_linear(ks[1], (cfg.conv_width, d_in + 2 * ns),
+                              cfg.jdtype, scale=0.5),
+        "a_log": jnp.zeros((heads,), jnp.float32),
+        "dt_bias": jnp.zeros((heads,), jnp.float32),
+        "d_skip": jnp.ones((heads,), jnp.float32),
+        "w_out": init_linear(ks[2], (d_in, d), cfg.jdtype),
+        "norm_z": jnp.ones((d_in,), jnp.float32),
+    }
+
+
+class MambaState(NamedTuple):
+    h: Array        # (B, heads, hd, ns) SSM state
+    conv: Array     # (B, conv_width - 1, d_conv) conv tail
+
+
+def _mamba_split(p: dict, x: Array, cfg: ArchConfig):
+    d_in, heads, hd = mamba2_dims(cfg)
+    ns = cfg.ssm_state
+    proj = x @ p["w_in"]
+    xz, rest = jnp.split(proj, [2 * d_in], axis=-1)
+    xi, z = jnp.split(xz, 2, axis=-1)
+    bc, dt = jnp.split(rest, [2 * ns], axis=-1)
+    return xi, z, bc, dt                     # (..., d_in), (..., d_in), (..., 2ns), (..., heads)
+
+
+def _causal_conv(u: Array, w: Array, tail: Array | None):
+    """Depthwise causal conv. u: (B, S, C); w: (K, C); tail: (B, K-1, C)."""
+    k = w.shape[0]
+    if tail is None:
+        tail = jnp.zeros((u.shape[0], k - 1, u.shape[2]), u.dtype)
+    up = jnp.concatenate([tail, u], axis=1)
+    out = sum(up[:, i:i + u.shape[1]] * w[i] for i in range(k))
+    new_tail = up[:, -(k - 1):] if k > 1 else tail
+    return jax.nn.silu(out), new_tail
+
+
+def mamba2_forward(p: dict, x: Array, cfg: ArchConfig,
+                   chunk: int = 0, return_state: bool = False):
+    """Training/prefill: x (B, S, d) -> (B, S, d). Chunked SSD scan.
+
+    With ``return_state`` also returns the MambaState after the sequence
+    (decode handoff for prefill)."""
+    chunk = chunk or cfg.ssm_chunk
+    b, s, d = x.shape
+    d_in, heads, hd = mamba2_dims(cfg)
+    ns = cfg.ssm_state
+    xi, z, bc, dt = _mamba_split(p, x, cfg)
+    conv_in = jnp.concatenate([xi, bc], axis=-1)
+    conv_tail = conv_in[:, -(cfg.conv_width - 1):] if s >= cfg.conv_width - 1 \
+        else jnp.pad(conv_in, ((0, 0), (cfg.conv_width - 1 - s, 0), (0, 0)))
+    conv_out, _ = _causal_conv(conv_in, p["conv_w"], None)
+    xi, bc = conv_out[..., :d_in], conv_out[..., d_in:]
+    bmat, cmat = jnp.split(bc, 2, axis=-1)                 # (B,S,ns) each
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # (B,S,heads)
+    a = -jnp.exp(p["a_log"])                               # (heads,)
+    decay = jnp.exp(dt * a)                                # (B,S,heads) in (0,1)
+
+    xh = xi.reshape(b, s, heads, hd).astype(jnp.float32)
+    xh = xh * dt[..., None]                                # dt-scaled input
+    nchunks = -(-s // chunk)
+    pad = nchunks * chunk - s
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0)))
+        decay = jnp.pad(decay, ((0, 0), (0, pad), (0, 0)),
+                        constant_values=1.0)
+    xh = xh.reshape(b, nchunks, chunk, heads, hd)
+    bm = bmat.reshape(b, nchunks, chunk, ns).astype(jnp.float32)
+    cm = cmat.reshape(b, nchunks, chunk, ns).astype(jnp.float32)
+    dc = decay.reshape(b, nchunks, chunk, heads)
+
+    def chunk_step(h, inp):
+        xc, bc_, cc, dcc = inp                 # (B,chunk,heads,hd) etc
+        logd = jnp.log(jnp.maximum(dcc, 1e-20))
+        cums = jnp.cumsum(logd, axis=1)        # (B,chunk,heads)
+        # intra-chunk: y[t] = sum_{u<=t} exp(cums[t]-cums[u]) C_t.B_u x_u
+        qk = jnp.einsum("bts,bus->btu", cc, bc_)             # (B,chunk,chunk)
+        rel = cums[:, :, None, :] - cums[:, None, :, :]      # (B,t,u,heads)
+        tri = (jnp.arange(xc.shape[1])[:, None]
+               >= jnp.arange(xc.shape[1])[None, :])
+        gate = jnp.where(tri[None, :, :, None], jnp.exp(rel), 0.0)
+        y_intra = jnp.einsum("btu,btuh,buhd->bthd", qk, gate, xc)
+        # inter-chunk: contribution of carried state
+        y_inter = jnp.einsum("bts,bth,bhds->bthd",
+                             cc, jnp.exp(cums), h)
+        # state update: h' = (prod decay) h + sum_u (prod_{>u} decay) B_u x_u
+        total = cums[:, -1]                                   # (B,heads)
+        w_u = jnp.exp(total[:, None, :] - cums)               # (B,chunk,heads)
+        h_new = (jnp.exp(total)[:, :, None, None] * h
+                 + jnp.einsum("buh,buhd,bus->bhds", w_u, xc, bc_))
+        return h_new, y_intra + y_inter
+
+    h0 = jnp.zeros((b, heads, hd, ns), jnp.float32)
+    h_final, ys = scan_or_unroll(chunk_step, h0,
+                                 (xh.transpose(1, 0, 2, 3, 4),
+                                  bm.transpose(1, 0, 2, 3),
+                                  cm.transpose(1, 0, 2, 3),
+                                  dc.transpose(1, 0, 2, 3)))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, nchunks * chunk, heads, hd)
+    y = y[:, :s]
+    xh_unpad = xi.reshape(b, s, heads, hd).astype(jnp.float32)
+    y = y + p["d_skip"][None, None, :, None] * xh_unpad       # D skip
+    y = y.reshape(b, s, d_in)
+    # gated RMSNorm output
+    zf = jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(y * y, axis=-1, keepdims=True)
+    y = y * jax.lax.rsqrt(var + 1e-6) * p["norm_z"] * zf
+    out = (y.astype(x.dtype)) @ p["w_out"]
+    if return_state:
+        return out, MambaState(h_final, conv_tail.astype(cfg.jdtype))
+    return out
+
+
+def mamba2_init_state(cfg: ArchConfig, batch: int) -> MambaState:
+    d_in, heads, hd = mamba2_dims(cfg)
+    ns = cfg.ssm_state
+    return MambaState(
+        h=jnp.zeros((batch, heads, hd, ns), jnp.float32),
+        conv=jnp.zeros((batch, cfg.conv_width - 1, d_in + 2 * ns), cfg.jdtype))
+
+
+def mamba2_decode(p: dict, x: Array, state: MambaState,
+                  cfg: ArchConfig) -> tuple[Array, MambaState]:
+    """One-token step. x: (B, 1, d)."""
+    b = x.shape[0]
+    d_in, heads, hd = mamba2_dims(cfg)
+    ns = cfg.ssm_state
+    xi, z, bc, dt = _mamba_split(p, x, cfg)
+    conv_in = jnp.concatenate([xi, bc], axis=-1)              # (B,1,dc)
+    conv_out, new_tail = _causal_conv(conv_in, p["conv_w"], state.conv)
+    xi, bc = conv_out[..., :d_in], conv_out[..., d_in:]
+    bmat, cmat = jnp.split(bc[:, 0], 2, axis=-1)              # (B,ns)
+    dtv = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])
+    decay = jnp.exp(dtv * (-jnp.exp(p["a_log"])))             # (B,heads)
+    xh = xi[:, 0].reshape(b, heads, hd).astype(jnp.float32) * dtv[..., None]
+    h_new = (decay[..., None, None] * state.h
+             + jnp.einsum("bhd,bs->bhds", xh, bmat.astype(jnp.float32)))
+    y = jnp.einsum("bhds,bs->bhd", h_new, cmat.astype(jnp.float32))
+    y = y + p["d_skip"][None, :, None] * xi[:, 0].reshape(
+        b, heads, hd).astype(jnp.float32)
+    y = y.reshape(b, 1, d_in)
+    zf = jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(y * y, axis=-1, keepdims=True)
+    y = y * jax.lax.rsqrt(var + 1e-6) * p["norm_z"] * zf
+    return (y.astype(x.dtype)) @ p["w_out"], MambaState(h_new, new_tail)
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 ("Finch") time-mix with data-dependent decay
+# ---------------------------------------------------------------------------
+
+RWKV_HD = 64
+
+
+def rwkv6_dims(cfg: ArchConfig):
+    heads = cfg.d_model // RWKV_HD
+    return heads, RWKV_HD
+
+
+def rwkv6_state_heads(cfg: ArchConfig) -> int:
+    """Head count of the wkv state, padded for head-aligned sharding.
+
+    40 heads on a 16-way model axis = 2.5 heads/chip: the partitioner must
+    exchange state slices at head boundaries every token.  Padding to
+    ``cfg.head_pad_to`` (48 -> 3 heads/chip) makes every per-head state op
+    local.  Exact: padded channels carry r = k = v = 0, so their state rows
+    stay identically zero.
+    """
+    heads, _ = rwkv6_dims(cfg)
+    if cfg.head_pad_to and cfg.head_pad_to > heads:
+        return cfg.head_pad_to
+    return heads
+
+
+def _pad_heads(t: Array, cfg: ArchConfig, value: float = 0.0) -> Array:
+    """Pad the trailing flat channel dim from heads*hd to padded heads*hd."""
+    heads, hd = rwkv6_dims(cfg)
+    ph = rwkv6_state_heads(cfg)
+    if ph == heads:
+        return t
+    pad = [(0, 0)] * (t.ndim - 1) + [(0, (ph - heads) * hd)]
+    return jnp.pad(t, pad, constant_values=value)
+
+
+def rwkv6_params(key: Array, cfg: ArchConfig) -> dict:
+    d = cfg.d_model
+    heads, hd = rwkv6_dims(cfg)
+    lora = 64
+    ks = jax.random.split(key, 8)
+    return {
+        "mu": 0.5 * jnp.ones((4, d), cfg.jdtype),   # token-shift mix r,k,v,w
+        "w_r": init_linear(ks[0], (d, d), cfg.jdtype),
+        "w_k": init_linear(ks[1], (d, d), cfg.jdtype),
+        "w_v": init_linear(ks[2], (d, d), cfg.jdtype),
+        "w_g": init_linear(ks[3], (d, d), cfg.jdtype),
+        "decay_a": init_linear(ks[4], (d, lora), cfg.jdtype),
+        "decay_b": init_linear(ks[5], (lora, d), cfg.jdtype),
+        "decay_bias": -6.0 * jnp.ones((d,), jnp.float32),
+        "u_bonus": jnp.zeros((heads, hd), jnp.float32),
+        "w_out": init_linear(ks[6], (d, d), cfg.jdtype),
+        "ln_x": jnp.ones((d,), jnp.float32),
+    }
+
+
+def _rwkv_proj(p: dict, x: Array, x_prev: Array, cfg: ArchConfig):
+    """Token-shift projections. x: (B,S,d); x_prev: (B,S,d) shifted input."""
+    mu = p["mu"]
+    def mix(i):
+        return x * mu[i] + x_prev * (1.0 - mu[i])
+    r = mix(0) @ p["w_r"]
+    k = mix(1) @ p["w_k"]
+    v = mix(2) @ p["w_v"]
+    wdec = (mix(3) @ p["decay_a"]) @ p["decay_b"]
+    wdec = -jnp.exp(p["decay_bias"] + wdec.astype(jnp.float32))  # log-decay < 0
+    decay = jnp.exp(wdec)                                        # (B,S,d) in (0,1)
+    g = jax.nn.silu(x @ p["w_g"])
+    return r, k, v, decay, g
+
+
+def rwkv6_forward(p: dict, x: Array, cfg: ArchConfig,
+                  chunk: int = 0, return_state: bool = False):
+    """Training/prefill chunked linear attention with per-channel decay."""
+    chunk = chunk or cfg.ssm_chunk
+    b, s, d = x.shape
+    heads, hd = rwkv6_dims(cfg)
+    x_prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    r, k, v, decay, g = _rwkv_proj(p, x, x_prev, cfg)
+    # Training runs with NATIVE heads (padding costs ~+10% train memory for
+    # nothing — the per-token state exchange only hurts decode); the padded
+    # layout is applied at the decode handoff below and inside rwkv6_decode.
+    ph = heads
+
+    def hsplit(t):
+        return t.reshape(b, s, ph, hd).astype(jnp.float32)
+    r, k, v, dc = hsplit(r), hsplit(k), hsplit(v), hsplit(decay)
+    u = p["u_bonus"]
+
+    nchunks = -(-s // chunk)
+    pad = nchunks * chunk - s
+    if pad:
+        r, k, v = (jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                   for t in (r, k, v))
+        dc = jnp.pad(dc, ((0, 0), (0, pad), (0, 0), (0, 0)),
+                     constant_values=1.0)
+    def ch(t):
+        return t.reshape(b, nchunks, chunk, ph, hd).transpose(1, 0, 2, 3, 4)
+    rc, kc, vc, dcc = ch(r), ch(k), ch(v), ch(dc)
+
+    def chunk_step(state, inp):
+        rb, kb, vb, db = inp                  # (B,chunk,heads,hd)
+        logd = jnp.log(jnp.maximum(db, 1e-20))
+        cums = jnp.cumsum(logd, axis=1)       # (B,chunk,heads,hd)
+        # inter-chunk: y_t += (r_t * prod_{<=t-1} d) @ state
+        # (exponent clips: see kernels/rwkv6_scan.py — only active when the
+        # true coefficient underflows anyway)
+        rd = rb * jnp.exp(jnp.clip(cums - logd, -60.0, 60.0))
+        y_inter = jnp.einsum("bthd,bhde->bthe", rd, state)
+        # intra-chunk: y_t += sum_{u<t} (r_t . (d-prods) k_u) v_u + u-bonus diag
+        # coefficient of k_u v_u at step t is prod_{s=u+1}^{t-1} d_s
+        kd = kb * jnp.exp(jnp.clip(-cums, -60.0, 60.0))
+        att = jnp.einsum("bthd,buhd->bthu", rd, kd)
+        tri = (jnp.arange(chunk)[:, None] > jnp.arange(chunk)[None, :])
+        att = jnp.where(tri[None, :, None, :], att, 0.0)
+        y_intra = jnp.einsum("bthu,buhe->bthe", att, vb)
+        # current-token bonus: r_t . (u * k_t) v_t
+        bonus = jnp.einsum("bthd,bthd->bth", rb, u[None, None] * kb)
+        y_bonus = bonus[..., None] * vb
+        # state update: state' = prod(d) state + sum_u (prod_{>u} d) k_u v_u
+        total = cums[:, -1]                    # (B,heads,hd)
+        wu = jnp.exp(total[:, None] - cums)    # (B,chunk,heads,hd)
+        state_new = (jnp.exp(total)[..., None] * state
+                     + jnp.einsum("buhd,buhe->bhde", kb * wu, vb))
+        return state_new, y_inter + y_intra + y_bonus
+
+    s0 = jnp.zeros((b, ph, hd, hd), jnp.float32)
+    s_final, ys = scan_or_unroll(chunk_step, s0, (rc, kc, vc, dcc))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, nchunks * chunk, ph * hd)
+    y = y[:, :s]
+    # group-norm-ish output norm + gate (padded heads are all-zero: their
+    # var is 0 and the normalised rows stay 0)
+    yh = y.reshape(b, s, ph, hd)
+    var = jnp.mean(yh * yh, axis=-1, keepdims=True)
+    yh = yh * jax.lax.rsqrt(var + 1e-6)
+    y = yh.reshape(b, s, ph * hd)[:, :, :d] * p["ln_x"]
+    out = (y * g.astype(jnp.float32)).astype(x.dtype) @ p["w_out"]
+    if return_state:
+        # NOTE: s_final includes padded steps with decay=1, k=v=0 — a no-op
+        # on the state, so it is exactly the state after token s.  Pad the
+        # head dim to the decode (sharding-aligned) layout here.
+        php = rwkv6_state_heads(cfg)
+        if php != heads:
+            s_final = jnp.pad(
+                s_final, ((0, 0), (0, php - heads), (0, 0), (0, 0)))
+        return out, RWKVState(s_final, x[:, -1])
+    return out
+
+
+class RWKVState(NamedTuple):
+    s: Array          # (B, heads, hd, hd) wkv state
+    x_prev: Array     # (B, d) last input (token shift)
+
+
+def rwkv6_init_state(cfg: ArchConfig, batch: int) -> RWKVState:
+    _, hd = rwkv6_dims(cfg)
+    ph = rwkv6_state_heads(cfg)
+    return RWKVState(jnp.zeros((batch, ph, hd, hd), jnp.float32),
+                     jnp.zeros((batch, cfg.d_model), cfg.jdtype))
+
+
+def rwkv6_decode(p: dict, x: Array, state: RWKVState,
+                 cfg: ArchConfig) -> tuple[Array, RWKVState]:
+    """One-token step. x: (B, 1, d)."""
+    b, _, d = x.shape
+    heads, hd = rwkv6_dims(cfg)
+    xp = state.x_prev[:, None, :]
+    r, k, v, decay, g = _rwkv_proj(p, x, xp, cfg)
+    ph = rwkv6_state_heads(cfg)
+    r, k, v = (_pad_heads(t, cfg) for t in (r, k, v))
+    decay = _pad_heads(decay, cfg, value=1.0)
+    def hs(t):
+        return t[:, 0].reshape(b, ph, hd).astype(jnp.float32)
+    r, k, v, dc = hs(r), hs(k), hs(v), hs(decay)
+    u = _pad_heads(p["u_bonus"].reshape(-1), cfg).reshape(ph, hd)
+    kv = jnp.einsum("bhd,bhe->bhde", k, v)
+    y = jnp.einsum("bhd,bhde->bhe", r, state.s + u[..., None] * kv)
+    s_new = dc[..., None] * state.s + kv
+    var = jnp.mean(y * y, axis=-1, keepdims=True)
+    y = (y * jax.lax.rsqrt(var + 1e-6)).reshape(b, 1, ph * hd)[:, :, :d] \
+        * p["ln_x"]
+    out = (y * g.astype(jnp.float32)).astype(x.dtype) @ p["w_out"]
+    return out, RWKVState(s_new, x[:, 0])

@@ -1,0 +1,3 @@
+from .optimizers import AdamW, DualAveragingOpt, Optimizer, Sgd, make_optimizer
+
+__all__ = ["AdamW", "DualAveragingOpt", "Optimizer", "Sgd", "make_optimizer"]

@@ -1,0 +1,100 @@
+"""Consensus: graphs, doubly-stochastic P, gossip convergence (paper §3, Lemma 1)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import consensus as cns
+
+
+GRAPH_CASES = [("ring", 6), ("ring", 11), ("complete", 8), ("star", 7),
+               ("paper", 10), ("torus", 12), ("erdos_renyi", 9)]
+
+
+@pytest.mark.parametrize("name,n", GRAPH_CASES)
+def test_graphs_connected_symmetric(name, n):
+    adj = cns.build_graph(name, n)
+    assert adj.shape == (n, n)
+    assert not adj.diagonal().any()
+    assert (adj == adj.T).all()
+    assert cns.is_connected(adj)
+
+
+@pytest.mark.parametrize("name,n", GRAPH_CASES)
+def test_metropolis_doubly_stochastic_psd(name, n):
+    p = cns.metropolis_weights(cns.build_graph(name, n), lazy=0.5)
+    assert np.allclose(p.sum(0), 1.0)
+    assert np.allclose(p.sum(1), 1.0)
+    assert (p >= -1e-12).all()
+    ev = np.linalg.eigvalsh(p)
+    assert ev.min() >= -1e-9          # PSD (paper requires PSD P)
+    assert cns.lambda2(p) < 1.0       # connected -> spectral gap
+
+
+def test_paper_graph_lambda2_matches_paper():
+    """App. I.1 reports lambda_2 = 0.888 for the 10-node topology."""
+    p = cns.metropolis_weights(cns.paper_graph(), lazy=cns.PAPER_GRAPH_LAZY)
+    assert abs(cns.lambda2(p) - 0.888) < 0.002
+
+
+def test_gossip_preserves_mean_and_converges():
+    n, d = 10, 7
+    p = jnp.asarray(cns.metropolis_weights(cns.paper_graph()), jnp.float32)
+    msgs = jax.random.normal(jax.random.PRNGKey(0), (n, d))
+    mean = msgs.mean(0)
+    for r in (1, 5, 25):
+        out = cns.gossip(msgs, p, r)
+        # doubly-stochastic -> mean preserved exactly
+        np.testing.assert_allclose(np.asarray(out.mean(0)), np.asarray(mean),
+                                   rtol=1e-5, atol=1e-5)
+    err1 = float(cns.consensus_error(cns.gossip(msgs, p, 1)))
+    err40 = float(cns.consensus_error(cns.gossip(msgs, p, 40)))
+    # geometric decay at rate lambda_2 (paper graph: 0.888^39 ~ 1e-2)
+    assert err40 < 0.05 * err1
+
+
+def test_gossip_per_node_rounds():
+    """Nodes that stop early keep stale values; uniform per-node counts
+    reduce to the scalar-rounds case."""
+    n, d = 6, 3
+    p = jnp.asarray(cns.metropolis_weights(cns.ring_graph(n)), jnp.float32)
+    msgs = jax.random.normal(jax.random.PRNGKey(1), (n, d))
+    out = cns.gossip(msgs, p, jnp.array([0, 1, 2, 3, 4, 5]), max_rounds=5)
+    # node with r_i = 0 keeps its initial message
+    np.testing.assert_allclose(np.asarray(out[0]), np.asarray(msgs[0]),
+                               rtol=1e-6)
+    # uniform per-node counts == scalar rounds
+    out_u = cns.gossip(msgs, p, jnp.full((n,), 3), max_rounds=3)
+    np.testing.assert_allclose(np.asarray(out_u),
+                               np.asarray(cns.gossip(msgs, p, 3)), rtol=1e-5)
+
+
+def test_lemma1_round_bound_achieves_epsilon():
+    """Running the Lemma-1 number of rounds achieves eps accuracy."""
+    n = 10
+    p_np = cns.metropolis_weights(cns.paper_graph())
+    p = jnp.asarray(p_np, jnp.float32)
+    lip = 1.0
+    eps = 0.05
+    r = cns.lemma1_rounds(n, lip, eps, p_np)
+    # messages with norm <= L (the Lemma's setting after normalisation)
+    msgs = jax.random.normal(jax.random.PRNGKey(2), (n, 4))
+    msgs = msgs / jnp.linalg.norm(msgs, axis=1, keepdims=True) * lip
+    out = cns.gossip(msgs, p, r)
+    exact = cns.exact_average(msgs)
+    err = float(jnp.max(jnp.linalg.norm(out - exact, axis=1)))
+    assert err <= eps
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(3, 12), st.integers(0, 10))
+def test_gossip_sum_invariance_property(n, seed):
+    """Column-stochasticity: the (weighted) sum of messages is invariant —
+    the property that makes AMB's b-weighted consensus correct."""
+    adj = cns.ring_graph(n)
+    p = jnp.asarray(cns.metropolis_weights(adj), jnp.float32)
+    msgs = jax.random.normal(jax.random.PRNGKey(seed), (n, 5))
+    out = cns.gossip(msgs, p, 7)
+    np.testing.assert_allclose(np.asarray(out.sum(0)),
+                               np.asarray(msgs.sum(0)), rtol=2e-4, atol=2e-4)

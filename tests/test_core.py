@@ -1,0 +1,198 @@
+"""Dual averaging, straggler models, objectives (paper §3-§5 mechanics)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (BetaSchedule, Deterministic, InducedGroups,
+                        PauseModel, ShiftedExponential, amb_batch_sizes,
+                        amb_budget_from_fmb, fmb_finish_times, prox_step)
+from repro.core.objectives import LinearRegression, LogisticRegression
+from repro.core.regret import (shifted_exp_asymptotic_ratio, shifted_exp_ratio,
+                               theorem7_ratio)
+
+
+# ---------------------------------------------------------------------------
+# dual averaging
+# ---------------------------------------------------------------------------
+
+def test_prox_matches_numeric_argmin():
+    """prox = argmin <w,z> + beta ||w||^2 (checked by gradient stationarity)."""
+    key = jax.random.PRNGKey(0)
+    z = jax.random.normal(key, (32,))
+    beta = jnp.float32(2.5)
+    w = prox_step(z, beta)
+    # stationarity: z + 2 beta w = 0
+    np.testing.assert_allclose(np.asarray(z + 2 * beta * w), 0.0, atol=1e-6)
+
+
+def test_prox_ball_projection():
+    z = jnp.full((8,), -10.0)
+    w = prox_step(z, jnp.float32(0.5), radius=1.0)
+    assert abs(float(jnp.linalg.norm(w)) - 1.0) < 1e-5
+
+
+def test_beta_schedule_nondecreasing():
+    beta = BetaSchedule(k=2.0, mu=10.0)
+    ts = jnp.arange(1, 100)
+    vals = beta(ts)
+    assert bool(jnp.all(jnp.diff(vals) >= 0))
+    assert float(vals[0]) > 0
+
+
+def test_dual_averaging_converges_on_quadratic():
+    """Centralised dual averaging on F(w)=0.5||w - w*||^2 with exact grads."""
+    w_star = jnp.asarray([1.0, -2.0, 3.0])
+    beta = BetaSchedule(k=1.0, mu=1.0)
+    z = jnp.zeros(3)
+    w = jnp.zeros(3)
+    for t in range(1, 2000):
+        g = w - w_star
+        z = z + g
+        w = prox_step(z, beta(t + 1))
+    # dual averaging converges to a minimiser-adjacent point at O(1/sqrt(t))
+    assert float(jnp.linalg.norm(w - w_star)) < 0.2
+
+
+# ---------------------------------------------------------------------------
+# straggler models
+# ---------------------------------------------------------------------------
+
+MODELS = [Deterministic(grad_time=0.01, b_ref=100),
+          ShiftedExponential(lam=2 / 3, zeta=1.0, b_ref=600),
+          InducedGroups(),
+          PauseModel(group_sizes=(2, 2, 2, 2, 2))]
+
+
+@pytest.mark.parametrize("model", MODELS, ids=lambda m: type(m).__name__)
+def test_per_gradient_times_shape_positive(model):
+    n = sum(getattr(model, "group_sizes", [4])) if hasattr(
+        model, "group_sizes") else 4
+    t = model.per_gradient_times(jax.random.PRNGKey(0), n, 50)
+    assert t.shape == (n, 50)
+    assert bool(jnp.all(t > 0))
+
+
+def test_amb_batch_monotone_in_budget():
+    model = ShiftedExponential()
+    times = model.per_gradient_times(jax.random.PRNGKey(0), 8, 500)
+    b1 = amb_batch_sizes(times, 0.5)
+    b2 = amb_batch_sizes(times, 1.5)
+    assert bool(jnp.all(b2 >= b1))
+    assert bool(jnp.all(b2 <= 500))
+
+
+def test_fmb_finish_monotone_in_batch():
+    model = ShiftedExponential()
+    times = model.per_gradient_times(jax.random.PRNGKey(1), 8, 500)
+    f1 = fmb_finish_times(times, 10)
+    f2 = fmb_finish_times(times, 100)
+    assert bool(jnp.all(f2 > f1))
+
+
+def test_lemma6_expected_batch_at_least_fmb():
+    """E[b_AMB] >= b with T = (1 + n/b) mu (paper Lemma 6), empirically."""
+    n, b_global = 10, 600
+    model = ShiftedExponential(lam=2 / 3, zeta=1.0, b_ref=b_global // n)
+    t_budget = amb_budget_from_fmb(model, n, b_global)
+    totals = []
+    for s in range(200):
+        times = model.per_gradient_times(jax.random.PRNGKey(s), n, 4 * b_global)
+        totals.append(float(amb_batch_sizes(times, t_budget).sum()))
+    assert np.mean(totals) >= b_global * 0.98   # >= up to floor() effects
+
+
+def test_theorem7_wall_clock_bound():
+    """S_F <= (1 + sigma/mu sqrt(n-1)) S_A, empirically for shifted exp."""
+    n, b_per_node = 10, 60
+    model = ShiftedExponential(lam=2 / 3, zeta=1.0, b_ref=b_per_node)
+    t_budget = amb_budget_from_fmb(model, n, n * b_per_node)
+    fmb_tot, epochs = 0.0, 300
+    for s in range(epochs):
+        times = model.per_gradient_times(jax.random.PRNGKey(s), n, 4 * b_per_node)
+        fmb_tot += float(fmb_finish_times(times, b_per_node).max())
+    s_f = fmb_tot
+    s_a = epochs * t_budget
+    bound = theorem7_ratio(model.mean_batch_time(), model.std_batch_time(), n)
+    assert s_f <= bound * s_a * 1.02
+    assert s_f > s_a          # and stragglers really do cost FMB wall time
+
+
+def test_shifted_exp_ratios():
+    r = shifted_exp_ratio(lam=2 / 3, zeta=1.0, n=10, b=600)
+    assert r > 1.0
+    asym = shifted_exp_asymptotic_ratio(lam=2 / 3, zeta=1.0, n=10)
+    assert abs(asym - np.log(10) / (1 + 2 / 3)) < 1e-9
+
+
+# ---------------------------------------------------------------------------
+# objectives
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 100))
+def test_linreg_masked_sums_match_grad(seed):
+    obj = LinearRegression(dim=6)
+    key = jax.random.PRNGKey(seed)
+    w = jax.random.normal(key, (6,))
+    w_star = jax.random.normal(jax.random.fold_in(key, 1), (6,))
+    batch = obj.sample(jax.random.fold_in(key, 2), (9,), w_star)
+    mask = (jax.random.uniform(jax.random.fold_in(key, 3), (9,)) > 0.4
+            ).astype(jnp.float32)
+    gsum, lsum = obj.masked_sums(w, batch, mask)
+    # against autodiff of the masked *sum* loss
+    def sum_loss(w):
+        x, y = batch
+        r = (x @ w - y)
+        return 0.5 * jnp.sum(mask * r * r)
+    np.testing.assert_allclose(np.asarray(gsum),
+                               np.asarray(jax.grad(sum_loss)(w)),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(float(lsum), float(sum_loss(w)), rtol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 100))
+def test_logreg_masked_sums_match_autodiff(seed):
+    obj = LogisticRegression(dim=5, num_classes=3)
+    key = jax.random.PRNGKey(seed)
+    w = 0.1 * jax.random.normal(key, (obj.param_dim,))
+    means = obj.make_class_means(jax.random.fold_in(key, 1))
+    batch = obj.sample(jax.random.fold_in(key, 2), (7,), means)
+    mask = (jax.random.uniform(jax.random.fold_in(key, 3), (7,)) > 0.3
+            ).astype(jnp.float32)
+    gsum, lsum = obj.masked_sums(w, batch, mask)
+
+    def sum_loss(w):
+        x, y = batch
+        logits = obj._logits(w, x)
+        logp = jax.nn.log_softmax(logits)
+        return -jnp.sum(mask * jnp.take_along_axis(
+            logp, y[:, None], axis=-1)[:, 0])
+
+    np.testing.assert_allclose(np.asarray(gsum),
+                               np.asarray(jax.grad(sum_loss)(w)),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(float(lsum), float(sum_loss(w)), rtol=1e-5)
+
+
+def test_calibrated_budget_hits_target_heterogeneous():
+    """amb_budget_calibrated: E[b(T)] ~= b_global for group-heterogeneous
+    clusters where the Lemma-6 closed form (Assumption 1: identical T_i)
+    overshoots."""
+    from repro.core.stragglers import (InducedGroups, amb_budget_calibrated,
+                                       amb_budget_from_fmb)
+    n, b_global = 10, 1000
+    model = InducedGroups(group_sizes=(5, 2, 3), zetas=(9.0, 18.0, 27.0),
+                          lams=(1.0, 1.0, 1.0), b_ref=100)
+    t_cal = amb_budget_calibrated(model, n, b_global,
+                                  key=jax.random.PRNGKey(5))
+    t_l6 = amb_budget_from_fmb(model, n, b_global)
+    assert t_cal < t_l6          # closed form overshoots on heterogeneity
+    totals = []
+    for s in range(100):
+        times = model.per_gradient_times(
+            jax.random.PRNGKey(1000 + s), n, 4 * b_global // n)
+        totals.append(float(amb_batch_sizes(times, t_cal).sum()))
+    assert abs(np.mean(totals) - b_global) / b_global < 0.1

@@ -1,0 +1,146 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels.dual_update import dual_update_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.gossip_combine import gossip_combine_pallas
+from repro.kernels.rwkv6_scan import rwkv6_scan_pallas
+
+
+# ---------------------------------------------------------------------------
+# dual_update
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(7,), (128,), (1000, 37), (3, 5, 129)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_dual_update_sweep(shape, dtype):
+    k = jax.random.PRNGKey(0)
+    z = jax.random.normal(k, shape, jnp.float32)
+    w0 = jax.random.normal(jax.random.fold_in(k, 1), shape, dtype)
+    beta = jnp.float32(1.7)
+    got = dual_update_pallas(z, w0, beta, interpret=True, block=2048)
+    want = ref.dual_update_ref(z, w0, beta)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_dual_update_op_with_radius():
+    z = jnp.full((16,), 100.0)
+    w0 = jnp.zeros((16,))
+    w = ops.dual_update(z, w0, jnp.float32(1.0), radius=1.0, force="ref")
+    assert abs(float(jnp.linalg.norm(w)) - 1.0) < 1e-5
+
+
+# ---------------------------------------------------------------------------
+# gossip_combine
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("k,n", [(2, 100), (3, 4096), (5, 999)])
+def test_gossip_combine_sweep(k, n):
+    key = jax.random.PRNGKey(1)
+    msgs = jax.random.normal(key, (k, n))
+    w = jax.nn.softmax(jax.random.normal(jax.random.fold_in(key, 1), (k,)))
+    got = gossip_combine_pallas(msgs, w, interpret=True, block_rows=16)
+    want = ref.gossip_combine_ref(msgs, w)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+CASES = [
+    # (B, H, KV, Sq, Skv, hd, causal, window)
+    (1, 4, 4, 64, 64, 32, True, 0),        # MHA causal
+    (2, 4, 2, 100, 100, 64, True, 0),      # GQA, ragged seq
+    (1, 8, 2, 128, 128, 64, True, 32),     # sliding window
+    (1, 2, 2, 64, 128, 32, False, 0),      # cross attention (no causal)
+    (1, 4, 1, 257, 257, 64, True, 64),     # MQA, odd seq
+]
+
+
+@pytest.mark.parametrize("b,h,kv,sq,skv,hd,causal,window", CASES)
+def test_flash_attention_sweep(b, h, kv, sq, skv, hd, causal, window):
+    key = jax.random.PRNGKey(2)
+    q = jax.random.normal(key, (b, h, sq, hd), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, kv, skv, hd))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, kv, skv, hd))
+    got = flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                 block_q=64, block_k=64, interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_flash_attention_bf16():
+    key = jax.random.PRNGKey(3)
+    q = jax.random.normal(key, (1, 4, 64, 64), jnp.bfloat16)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (1, 2, 64, 64),
+                          jnp.bfloat16)
+    v = jax.random.normal(jax.random.fold_in(key, 2), (1, 2, 64, 64),
+                          jnp.bfloat16)
+    got = flash_attention_pallas(q, k, v, causal=True, window=0,
+                                 interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=True, window=0)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want), rtol=2e-2, atol=2e-2)
+
+
+def test_flash_attention_q_offset_decode_semantics():
+    """q_offset positions queries mid-cache (decode-style masking)."""
+    key = jax.random.PRNGKey(4)
+    q = jax.random.normal(key, (1, 2, 8, 32))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (1, 2, 64, 32))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (1, 2, 64, 32))
+    got = flash_attention_pallas(q, k, v, causal=True, window=0, q_offset=40,
+                                 block_q=8, block_k=32, interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=True, window=0,
+                                   q_offset=40)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# rwkv6 scan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bh,s,hd,chunk", [(2, 64, 32, 16), (4, 100, 64, 16),
+                                           (1, 17, 64, 8), (3, 256, 64, 32)])
+def test_rwkv6_scan_sweep(bh, s, hd, chunk):
+    key = jax.random.PRNGKey(5)
+    mk = lambda i: jax.random.normal(jax.random.fold_in(key, i), (bh, s, hd))
+    r, k, v = mk(0), mk(1), mk(2)
+    decay = 0.2 + 0.8 * jax.random.uniform(jax.random.fold_in(key, 3),
+                                           (bh, s, hd))
+    u = jax.random.normal(jax.random.fold_in(key, 4), (bh, hd))
+    got = rwkv6_scan_pallas(r, k, v, decay, u, chunk=chunk, interpret=True)
+    want = ref.rwkv6_chunk_ref(
+        r.reshape(1, bh, s, hd), k.reshape(1, bh, s, hd),
+        v.reshape(1, bh, s, hd), decay.reshape(1, bh, s, hd),
+        u).reshape(bh, s, hd)
+    scale = float(jnp.max(jnp.abs(want))) + 1e-6
+    np.testing.assert_allclose(np.asarray(got) / scale,
+                               np.asarray(want) / scale, atol=2e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 50))
+def test_rwkv6_ops_matches_ref_property(seed):
+    key = jax.random.PRNGKey(seed)
+    bh, s, hd = 2, 37, 64
+    mk = lambda i: jax.random.normal(jax.random.fold_in(key, i), (bh, s, hd))
+    decay = 0.5 + 0.5 * jax.random.uniform(jax.random.fold_in(key, 9),
+                                           (bh, s, hd))
+    u = jax.random.normal(jax.random.fold_in(key, 4), (bh, hd))
+    got = ops.rwkv6_scan(mk(0), mk(1), mk(2), decay, u,
+                         force="pallas_interpret")
+    want = ops.rwkv6_scan(mk(0), mk(1), mk(2), decay, u, force="ref")
+    scale = float(jnp.max(jnp.abs(want))) + 1e-6
+    np.testing.assert_allclose(np.asarray(got) / scale,
+                               np.asarray(want) / scale, atol=3e-5)

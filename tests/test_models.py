@@ -1,0 +1,309 @@
+"""Per-arch smoke tests (required) + model-layer unit/consistency tests."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_NAMES, get_config, smoke_config
+from repro.core.dual_averaging import BetaSchedule
+from repro.models import (decode_step, forward, init_decode_state,
+                          init_params, lm_loss, logits_fn, prefill)
+from repro.models.common import apply_rope, rms_norm, scan_or_unroll, unrolled_loops
+from repro.models.attention import flash_attention
+from repro.models import moe as moe_mod
+from repro.optim import DualAveragingOpt
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _batch_for(cfg, params, b, s, key=jax.random.PRNGKey(1)):
+    toks = jax.random.randint(key, (b, s), 0, cfg.vocab_size)
+    batch = {"labels": toks}
+    if cfg.input_mode == "embeds":
+        batch["embeds"] = params["embed"][toks]
+    else:
+        batch["tokens"] = toks
+    if cfg.family == "audio":
+        batch["enc_embeds"] = jax.random.normal(
+            jax.random.fold_in(key, 9), (b, cfg.encoder_seq, cfg.d_model),
+            cfg.jdtype)
+    return batch
+
+
+# ---------------------------------------------------------------------------
+# REQUIRED smoke tests: reduced variant, one forward + one train step on CPU
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_smoke_forward_and_train_step(arch):
+    cfg = smoke_config(arch)
+    assert cfg.num_layers <= 2 and cfg.d_model <= 512
+    assert cfg.num_experts <= 4
+    params = init_params(KEY, cfg)
+    b, s = 2, 64
+    batch = _batch_for(cfg, params, b, s)
+
+    # forward: shapes + finiteness
+    hidden, aux = forward(params, cfg, batch)
+    assert hidden.shape == (b, s, cfg.d_model)
+    logits = logits_fn(params, cfg, hidden)
+    assert logits.shape == (b, s, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+
+    # one full train step (loss + grads + dual-averaging update)
+    opt = DualAveragingOpt(beta=BetaSchedule(k=100.0, mu=1.0, scale=100.0))
+    state = opt.init(params)
+
+    def loss_fn(p):
+        return lm_loss(p, cfg, batch)[0]
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    assert bool(jnp.isfinite(loss))
+    new_params, state = opt.apply(grads, state, params)
+    # params moved, no NaNs anywhere
+    moved = jax.tree.map(
+        lambda a, b_: float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                            - b_.astype(jnp.float32)))),
+        params, new_params)
+    assert max(jax.tree.leaves(moved)) > 0
+    for leaf in jax.tree.leaves(new_params):
+        assert bool(jnp.all(jnp.isfinite(leaf.astype(jnp.float32))))
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_smoke_decode_step(arch):
+    cfg = smoke_config(arch)
+    params = init_params(KEY, cfg)
+    b = 2
+    state = init_decode_state(cfg, b, 32)
+    logits, state2 = decode_step(params, cfg, state,
+                                 jnp.zeros((b,), jnp.int32))
+    assert logits.shape == (b, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+    assert int(state2.pos) == 1
+
+
+# ---------------------------------------------------------------------------
+# consistency: train forward == token-by-token decode (per family)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ["qwen3-8b", "qwen2-1.5b", "rwkv6-3b",
+                                  "zamba2-1.2b", "whisper-base",
+                                  "internvl2-76b"])
+def test_forward_decode_consistency(arch):
+    cfg = smoke_config(arch)
+    if cfg.is_moe:
+        cfg = dataclasses.replace(cfg, capacity_factor=8.0)
+    params = init_params(KEY, cfg)
+    b, s = 1, 12
+    toks = jax.random.randint(jax.random.PRNGKey(2), (b, s), 0,
+                              cfg.vocab_size)
+    batch = _batch_for(cfg, params, b, s)
+    if "tokens" in batch:
+        batch["tokens"] = toks
+    else:
+        batch["embeds"] = params["embed"][toks]
+    hidden, _ = forward(params, cfg, batch)
+    lt = logits_fn(params, cfg, hidden).astype(jnp.float32)
+
+    state = init_decode_state(cfg, b, 32)
+    if cfg.family == "audio":
+        # decode needs the cross KV: go through prefill for the first token
+        lg, state = prefill(params, cfg, {k: (v[:, :1] if k != "enc_embeds"
+                                              else v)
+                                          for k, v in batch.items()
+                                          if k != "labels"},
+                            extra_capacity=s)
+        outs = [lg]
+        for t in range(1, s):
+            lg, state = decode_step(params, cfg, state, toks[:, t - 1])
+            outs.append(lg)
+        ld = jnp.stack(outs, 1)[:, :s]
+        # positions shift by one relative to pure decode; compare from pos 1
+        err = jnp.max(jnp.abs(lt[:, :1] - ld[:, :1]))
+    else:
+        outs = []
+        for t in range(s):
+            lg, state = decode_step(params, cfg, state, toks[:, t])
+            outs.append(lg)
+        ld = jnp.stack(outs, 1)
+        err = jnp.max(jnp.abs(lt - ld))
+    rel = float(err / (jnp.max(jnp.abs(lt)) + 1e-6))
+    assert rel < 0.02, f"{arch}: decode/train mismatch rel={rel}"
+
+
+@pytest.mark.parametrize("arch", ["qwen3-8b", "rwkv6-3b", "zamba2-1.2b",
+                                  "phi3.5-moe-42b-a6.6b", "whisper-base"])
+def test_prefill_matches_forward(arch):
+    cfg = smoke_config(arch)
+    if cfg.is_moe:
+        cfg = dataclasses.replace(cfg, capacity_factor=8.0)
+    params = init_params(KEY, cfg)
+    b, s = 2, 16
+    batch = _batch_for(cfg, params, b, s)
+    batch.pop("labels")
+    lg_pre, state = prefill(params, cfg, batch, extra_capacity=4)
+    hidden, _ = forward(params, cfg, batch)
+    lg_fwd = logits_fn(params, cfg, hidden)[:, -1]
+    np.testing.assert_allclose(
+        np.asarray(lg_pre, np.float32), np.asarray(lg_fwd, np.float32),
+        rtol=0.02, atol=0.02)
+    assert int(state.pos) == s
+
+
+# ---------------------------------------------------------------------------
+# sliding-window / ring-cache semantics
+# ---------------------------------------------------------------------------
+
+def test_swa_ring_cache_matches_full_cache_window_mask():
+    """Ring-buffer decode (O(window) memory) == full cache + window mask."""
+    cfg = dataclasses.replace(smoke_config("qwen3-8b"), sliding_window=8)
+    cfg_full = dataclasses.replace(cfg, sliding_window=8)
+    params = init_params(KEY, cfg)
+    b, steps = 1, 24
+    toks = jax.random.randint(jax.random.PRNGKey(3), (b, steps), 0,
+                              cfg.vocab_size)
+
+    st_ring = init_decode_state(cfg, b, 16)          # ring cap = window = 8
+    assert jax.tree.leaves(st_ring.caches)[0].shape[2] == 8
+    # full (linear) cache variant: window masking over a big cache
+    from repro.models import attention as attn_mod
+    st_full = init_decode_state(dataclasses.replace(cfg, sliding_window=0),
+                                b, steps)
+    st_full = jax.tree_util.tree_map(lambda x: x, st_full)
+
+    outs_ring = []
+    for t in range(steps):
+        lg, st_ring = decode_step(params, cfg, st_ring, toks[:, t])
+        outs_ring.append(lg)
+
+    # reference: full forward with SWA mask
+    hidden, _ = forward(params, cfg, {"tokens": toks})
+    lt = logits_fn(params, cfg, hidden).astype(jnp.float32)
+    lr = jnp.stack(outs_ring, 1)
+    rel = float(jnp.max(jnp.abs(lt - lr)) / (jnp.max(jnp.abs(lt)) + 1e-6))
+    assert rel < 0.02, f"ring SWA decode mismatch rel={rel}"
+
+
+def test_long_context_config_is_subquadratic():
+    cfg = get_config("qwen3-8b", shape="long_500k")
+    assert cfg.sliding_window > 0
+    cfg_ssm = get_config("rwkv6-3b", shape="long_500k")
+    assert cfg_ssm.sliding_window == 0          # natively O(1)
+
+
+# ---------------------------------------------------------------------------
+# layer units
+# ---------------------------------------------------------------------------
+
+def test_rope_preserves_norm_and_relativity():
+    key = jax.random.PRNGKey(4)
+    x = jax.random.normal(key, (1, 6, 2, 64))
+    pos = jnp.arange(6)[None]
+    y = apply_rope(x, pos, theta=10_000.0)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(y), axis=-1),
+                               np.linalg.norm(np.asarray(x), axis=-1),
+                               rtol=1e-4)
+    # relative property: <rope(q,i), rope(k,j)> depends only on i - j
+    q = jax.random.normal(jax.random.fold_in(key, 1), (1, 1, 1, 64))
+    k = jax.random.normal(jax.random.fold_in(key, 2), (1, 1, 1, 64))
+    def dot_at(i, j):
+        qi = apply_rope(q, jnp.array([[i]]), 10_000.0)
+        kj = apply_rope(k, jnp.array([[j]]), 10_000.0)
+        return float(jnp.sum(qi * kj))
+    assert abs(dot_at(5, 3) - dot_at(10, 8)) < 1e-3
+
+
+def test_rms_norm_scale_invariance():
+    x = jax.random.normal(jax.random.PRNGKey(5), (4, 32))
+    s = jnp.ones((32,))
+    y1 = rms_norm(x, s)
+    y2 = rms_norm(3.0 * x, s)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-5)
+
+
+def test_moe_matches_dense_topk_when_no_drops():
+    """With generous capacity, sort-based dispatch == naive per-token loop."""
+    cfg = dataclasses.replace(smoke_config("qwen3-moe-30b-a3b"),
+                              capacity_factor=8.0)
+    key = jax.random.PRNGKey(6)
+    p = moe_mod.moe_params(key, cfg)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (2, 8, cfg.d_model),
+                          cfg.jdtype)
+    out, aux = moe_mod.moe_forward(p, x, cfg)
+
+    # naive reference
+    xf = x.reshape(-1, cfg.d_model)
+    logits = xf.astype(jnp.float32) @ p["router"]
+    probs = jax.nn.softmax(logits, -1)
+    gate, idx = jax.lax.top_k(probs, cfg.experts_per_token)
+    gate = gate / gate.sum(-1, keepdims=True)
+    outs = []
+    for t in range(xf.shape[0]):
+        acc = jnp.zeros((cfg.d_model,), jnp.float32)
+        for j in range(cfg.experts_per_token):
+            e = int(idx[t, j])
+            g = jax.nn.silu(xf[t] @ p["w_gate"][e]) * (xf[t] @ p["w_up"][e])
+            acc += float(gate[t, j]) * (g @ p["w_down"][e]).astype(jnp.float32)
+        outs.append(acc)
+    want = jnp.stack(outs).reshape(2, 8, cfg.d_model)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want), rtol=0.05, atol=0.05)
+    assert 0.5 < float(aux) < 4.0    # load-balance loss near its floor of 1
+
+
+def test_flash_attention_jnp_unroll_equivalence():
+    """scan_or_unroll must not change flash attention numerics."""
+    key = jax.random.PRNGKey(7)
+    q = jax.random.normal(key, (1, 70, 2, 2, 32))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (1, 70, 2, 32))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (1, 70, 2, 32))
+    a = flash_attention(q, k, v, causal=True, window=0, q_offset=0,
+                        q_chunk=32, kv_chunk=32)
+    with unrolled_loops():
+        b = flash_attention(q, k, v, causal=True, window=0, q_offset=0,
+                            q_chunk=32, kv_chunk=32)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+def test_lm_loss_seq_weights_equal_weighted_mean():
+    """AMB's masked weighted loss == manual weighted mean of per-seq losses
+    (the identity that makes the exact-consensus pjit path faithful)."""
+    cfg = smoke_config("qwen2-1.5b")
+    params = init_params(KEY, cfg)
+    b, s = 4, 32
+    batch = _batch_for(cfg, params, b, s)
+    w = jnp.array([1.0, 0.0, 1.0, 1.0])
+    loss_w, m = lm_loss(params, cfg, batch, seq_weights=w)
+
+    # manual: per-sequence token-NLL sums / total included tokens
+    tot, cnt = 0.0, 0.0
+    for i in range(b):
+        sub = {k: v[i:i + 1] for k, v in batch.items()}
+        li, mi = lm_loss(params, cfg, sub)
+        tot += float(w[i]) * float(mi["loss"]) * float(mi["ntok"])
+        cnt += float(w[i]) * float(mi["ntok"])
+    np.testing.assert_allclose(float(m["loss"]), tot / cnt, rtol=2e-3)
+
+
+def test_moe_grouped_dispatch_matches_single_group():
+    """(b=2, s=64) -> 2 groups of 64 tokens; with generous capacity the
+    grouped dispatch must equal the single-group (decode-style) path."""
+    import dataclasses as _dc
+    from repro.models import moe as moe_mod
+    cfg = _dc.replace(smoke_config("qwen3-moe-30b-a3b"), capacity_factor=8.0)
+    key = jax.random.PRNGKey(7)
+    p = moe_mod.moe_params(key, cfg)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (2, 64, cfg.d_model),
+                          cfg.jdtype)
+    out_grouped, aux1 = moe_mod.moe_forward(p, x, cfg)      # groups = 2
+
+    # same tokens as one flat "sequence" => single group path
+    x1 = x.reshape(1, 128, cfg.d_model)
+    out_single, aux2 = moe_mod.moe_forward(p, x1, cfg)      # groups = 1
+    np.testing.assert_allclose(
+        np.asarray(out_grouped.reshape(1, 128, -1), np.float32),
+        np.asarray(out_single, np.float32), rtol=0.05, atol=0.05)
+    np.testing.assert_allclose(float(aux1), float(aux2), rtol=1e-5)

@@ -1,0 +1,73 @@
+"""Sharding-alignment paddings from §Perf: numerically exact by design."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import smoke_config
+from repro.models import ssm
+from repro.models.model import init_params, lm_loss, logits_fn, forward
+
+
+def test_rwkv6_head_padding_exact_forward_and_decode():
+    """head_pad_to: padded channels carry r=k=v=0 -> identical outputs."""
+    cfg = smoke_config("rwkv6-3b")
+    cfgp = dataclasses.replace(cfg, head_pad_to=3)   # 2 heads -> 3
+    p = ssm.rwkv6_params(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model),
+                          jnp.bfloat16)
+    y0 = ssm.rwkv6_forward(p, x, cfg)
+    y1 = ssm.rwkv6_forward(p, x, cfgp)
+    np.testing.assert_allclose(np.asarray(y0, np.float32),
+                               np.asarray(y1, np.float32), atol=1e-5)
+
+    st0 = ssm.rwkv6_init_state(cfg, 2)
+    st1 = ssm.rwkv6_init_state(cfgp, 2)
+    assert st1.s.shape[1] == 3 and st0.s.shape[1] == 2
+    d0, n0 = ssm.rwkv6_decode(p, x[:, :1], st0, cfg)
+    d1, n1 = ssm.rwkv6_decode(p, x[:, :1], st1, cfgp)
+    np.testing.assert_allclose(np.asarray(d0, np.float32),
+                               np.asarray(d1, np.float32), atol=1e-5)
+    # padded state rows stay identically zero
+    np.testing.assert_array_equal(np.asarray(n1.s[:, 2:]), 0.0)
+
+
+def test_rwkv6_padded_state_stays_zero_over_steps():
+    cfg = dataclasses.replace(smoke_config("rwkv6-3b"), head_pad_to=4)
+    p = ssm.rwkv6_params(jax.random.PRNGKey(2), cfg)
+    st = ssm.rwkv6_init_state(cfg, 1)
+    key = jax.random.PRNGKey(3)
+    for i in range(5):
+        x = jax.random.normal(jax.random.fold_in(key, i),
+                              (1, 1, cfg.d_model), jnp.bfloat16)
+        _, st = ssm.rwkv6_decode(p, x, st, cfg)
+    np.testing.assert_array_equal(np.asarray(st.s[:, 2:]), 0.0)
+
+
+def test_vocab_padding_exact_loss_and_logits():
+    """vocab_pad_to: params padded, logits sliced -> same loss/logit values
+    (same rng => the first V columns of the padded init are identical)."""
+    cfg = smoke_config("qwen2-1.5b")
+    cfgp = dataclasses.replace(cfg, vocab_pad_to=cfg.vocab_size + 64)
+    assert cfgp.padded_vocab == cfg.vocab_size + 64
+
+    params = init_params(jax.random.PRNGKey(0), cfgp)
+    assert params["embed"].shape[0] == cfgp.padded_vocab
+    assert params["unembed"].shape[1] == cfgp.padded_vocab
+
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0,
+                              cfg.vocab_size)
+    batch = {"tokens": toks,
+             "labels": jnp.concatenate(
+                 [toks[:, 1:], jnp.full((2, 1), -1, toks.dtype)], axis=1)}
+    hidden, _ = forward(params, cfgp, batch)
+    logits = logits_fn(params, cfgp, hidden)
+    assert logits.shape[-1] == cfg.vocab_size          # sliced back
+    loss, m = lm_loss(params, cfgp, batch)
+    assert bool(jnp.isfinite(loss))
+
+    # gradient flows only into real vocab rows of unembed
+    g = jax.grad(lambda p_: lm_loss(p_, cfgp, batch)[0])(params)
+    np.testing.assert_array_equal(
+        np.asarray(g["unembed"][:, cfg.vocab_size:], np.float32), 0.0)
