@@ -1,0 +1,144 @@
+"""Benchmark the repro.dist train steps: exact-psum vs gossip consensus.
+
+Times, on a host-device mesh (forced device count, CPU-friendly smoke
+config):
+
+  * exact-consensus ``make_train_step`` (dual averaging),
+  * ``make_gossip_train_step`` at several round counts r,
+  * the ``gossip_combine`` K-way weighted combine: Pallas kernel
+    (interpret mode on CPU) vs the pure-jnp reference, at model-sized
+    message widths.
+
+Writes ``artifacts/bench/BENCH_dist.json`` and prints the
+``name,us_per_call,derived`` CSV rows (benchmarks/run.py conventions).
+
+    PYTHONPATH=src python -m benchmarks.dist_step --steps 10
+"""
+from __future__ import annotations
+
+import os
+
+if "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import argparse          # noqa: E402
+import json              # noqa: E402
+import time              # noqa: E402
+from pathlib import Path  # noqa: E402
+
+import jax               # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import smoke_config                      # noqa: E402
+from repro.core.dual_averaging import BetaSchedule          # noqa: E402
+from repro.data import LMTokenStream, shard_batch           # noqa: E402
+from repro.dist import use_sharding                         # noqa: E402
+from repro.dist.amb import (AMBConfig, make_gossip_train_step,  # noqa: E402
+                            make_train_step, num_workers)
+from repro.dist.params import tree_shardings                # noqa: E402
+from repro.kernels import ref                               # noqa: E402
+from repro.kernels.gossip_combine import gossip_combine_pallas  # noqa: E402
+from repro.models import init_params                        # noqa: E402
+from repro.optim import make_optimizer                      # noqa: E402
+
+
+def _time_it(fn, *args, iters: int = 5) -> float:
+    """Median-free simple timing: best of ``iters`` after one warmup."""
+    out = fn(*args)
+    jax.block_until_ready(out)
+    best = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def bench_train_steps(arch: str, steps: int, seq_len: int) -> dict:
+    mesh = jax.make_mesh((4, 2), ("data", "model"))
+    cfg = smoke_config(arch)
+    n = num_workers(mesh)
+    beta = BetaSchedule(k=20.0, mu=1.0, scale=50.0)
+    stream = LMTokenStream(vocab_size=cfg.vocab_size, seq_len=seq_len,
+                           seed=0)
+    b = jnp.array([2, 1, 2, 2], jnp.int32)
+    out: dict = {"arch": arch, "mesh": "4x2", "workers": n,
+                 "seq_len": seq_len, "steps_timed": steps}
+
+    with use_sharding(mesh):
+        params = init_params(jax.random.PRNGKey(0), cfg)
+        params = jax.tree.map(jax.device_put, params,
+                              tree_shardings(params, mesh))
+        batch = shard_batch(stream.batch(0, 0, 2 * n), mesh)
+
+        opt = make_optimizer("dual_averaging", beta=beta)
+        step = jax.jit(make_train_step(cfg, opt, mesh, AMBConfig()))
+        st = opt.init(params)
+        t = _time_it(lambda: step(params, st, batch, b), iters=steps)
+        out["exact_step_s"] = t
+
+        for r in (4, 16, 60):
+            amb = AMBConfig(consensus="gossip", gossip_rounds=r, beta=beta)
+            init_state, gstep = make_gossip_train_step(cfg, mesh, amb)
+            gs = init_state(params)
+            gstep_j = jax.jit(gstep)
+            out[f"gossip_r{r}_step_s"] = _time_it(
+                lambda: gstep_j(gs, batch, b), iters=steps)
+
+    out["gossip_r4_overhead"] = out["gossip_r4_step_s"] / out["exact_step_s"]
+    return out
+
+
+def bench_gossip_combine(widths=(1 << 16, 1 << 20)) -> dict:
+    """K-way weighted combine: Pallas (interpret on CPU) vs jnp reference."""
+    out: dict = {"k": 3}
+    for nmsg in widths:
+        key = jax.random.PRNGKey(0)
+        msgs = jax.random.normal(key, (3, nmsg), jnp.float32)
+        w = jnp.asarray([0.5, 0.25, 0.25], jnp.float32)
+        ref_j = jax.jit(ref.gossip_combine_ref)
+        t_ref = _time_it(ref_j, msgs, w)
+        t_pal = _time_it(
+            lambda: gossip_combine_pallas(msgs, w, interpret=True))
+        got = gossip_combine_pallas(msgs, w, interpret=True)
+        want = ref_j(msgs, w)
+        err = float(jnp.max(jnp.abs(got - want)))
+        out[f"n{nmsg}"] = {"jnp_ref_s": t_ref, "pallas_interpret_s": t_pal,
+                           "max_abs_err": err,
+                           "note": "interpret mode on CPU; compiled Pallas "
+                                   "timing requires TPU"}
+    return out
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-1.5b")
+    ap.add_argument("--steps", type=int, default=5)
+    ap.add_argument("--seq-len", type=int, default=32)
+    ap.add_argument("--out", default="artifacts/bench")
+    args = ap.parse_args(argv)
+
+    rec = {
+        "name": "dist_step",
+        "devices": len(jax.devices()),
+        "train_steps": bench_train_steps(args.arch, args.steps,
+                                         args.seq_len),
+        "gossip_combine": bench_gossip_combine(),
+    }
+    outdir = Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+    (outdir / "BENCH_dist.json").write_text(json.dumps(rec, indent=2))
+
+    ts = rec["train_steps"]
+    print("name,us_per_call,derived")
+    print(f"dist_exact_step,{ts['exact_step_s'] * 1e6:.0f},1.0")
+    for r in (4, 16, 60):
+        print(f"dist_gossip_r{r}_step,{ts[f'gossip_r{r}_step_s'] * 1e6:.0f},"
+              f"{ts[f'gossip_r{r}_step_s'] / ts['exact_step_s']:.2f}")
+    print(f"[ok] wrote {outdir / 'BENCH_dist.json'}")
+    return rec
+
+
+if __name__ == "__main__":
+    main()

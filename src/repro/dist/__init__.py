@@ -1,0 +1,31 @@
+"""Distributed AMB on real device meshes — the production substrate.
+
+Public API:
+
+  * :mod:`repro.dist.sharding` — ``use_sharding(mesh)`` context +
+    ``constrain`` logical-axis activation annotations (no-op off-mesh).
+  * :mod:`repro.dist.params` — rule-based FSDP x TP parameter layout:
+    ``param_spec(name, shape, mesh)`` and ``tree_shardings``.
+  * :mod:`repro.dist.amb` — the paper's epoch update as SPMD train steps:
+    ``make_train_step`` (exact consensus, any optimizer),
+    ``make_gossip_train_step`` (per-worker dual replicas, ring-Metropolis
+    gossip over the worker axes, Pallas-fused combine), plus
+    ``seq_weights_from_b`` (eq.-3 variable-minibatch masking) and
+    ``num_workers`` (workers = product of non-"model" axes).
+
+The single-device simulator lives in :mod:`repro.core`; this package is the
+same math laid out on a mesh, so scaling PRs (pipelined steps, quantized
+mesh gossip, multi-pod benchmarks) build here.
+"""
+from .sharding import active_mesh, constrain, use_sharding   # noqa: F401
+from .params import param_spec, tree_shardings               # noqa: F401
+from .amb import (AMBConfig, gossip_primal,                  # noqa: F401
+                  make_gossip_train_step, make_train_step, num_workers,
+                  ring_gossip, seq_weights_from_b, worker_axes)
+
+__all__ = [
+    "active_mesh", "constrain", "use_sharding", "param_spec",
+    "tree_shardings", "AMBConfig", "gossip_primal",
+    "make_gossip_train_step", "make_train_step", "num_workers",
+    "ring_gossip", "seq_weights_from_b", "worker_axes",
+]

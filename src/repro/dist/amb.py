@@ -1,0 +1,276 @@
+"""Distributed AMB train steps on real device meshes (paper §3 -> SPMD).
+
+Two implementations of the paper's epoch update, sharing the variable-
+minibatch masking (eq. 3) and the eq.-6 weighted normalisation:
+
+  * :func:`make_train_step` — *exact consensus* (eps = 0, the master/worker
+    limit): one global weighted-loss backward pass.  The per-sequence 0/1
+    weights from ``b_i(t)`` make its gradient exactly
+    ``sum_i b_i g_i / sum_i b_i`` — the r -> infinity limit of gossip —
+    and the update is any :class:`repro.optim.Optimizer` (dual averaging
+    for the paper's protocol, AdamW/SGD baselines).
+
+  * :func:`make_gossip_train_step` — *decentralized consensus* (Lemma 1
+    regime): every worker keeps its own dual replica ``z_i``, computes its
+    local masked gradient at its own primal ``w_i = prox(z_i)``, and runs
+    ``r`` synchronous rounds of ring-Metropolis gossip on the messages
+    ``n b_i (z_i + g_i)`` with the scalar ``n b_i`` alongside, so the
+    normaliser b(t) is itself agreed by consensus — the same numerics as
+    :func:`repro.core.consensus.gossip`, but laid out along the mesh worker
+    axes with the K-way weighted combine fused by
+    :mod:`repro.kernels.gossip_combine` on TPU.
+
+Workers are the product of the non-"model" mesh axes, so a multi-pod
+("pod", "data", "model") mesh gossips jointly across pod x data.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import consensus as cns
+from ..core.dual_averaging import BetaSchedule
+from ..kernels import ops as kops
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class AMBConfig:
+    """Static AMB step configuration (consensus + dual-averaging knobs)."""
+
+    consensus: str = "exact"          # "exact" | "gossip"
+    gossip_rounds: int = 5            # r (gossip path)
+    graph: str = "ring"               # worker communication graph
+    lazy: float = 0.5                 # lazy-Metropolis mixing (PSD P)
+    beta: BetaSchedule = BetaSchedule()   # gossip-path dual averaging
+    radius: Optional[float] = None
+
+
+# ---------------------------------------------------------------------------
+# Workers and variable-minibatch masking
+# ---------------------------------------------------------------------------
+
+def worker_axes(mesh) -> tuple:
+    """Mesh axes that enumerate AMB workers (everything but "model")."""
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def num_workers(mesh) -> int:
+    """Workers = product of the non-"model" axis extents (pod x data)."""
+    return int(np.prod([int(mesh.shape[a]) for a in worker_axes(mesh)],
+                       dtype=np.int64)) if worker_axes(mesh) else 1
+
+
+def seq_weights_from_b(b: Array, global_batch: int, n_workers: int) -> Array:
+    """Per-sequence 0/1 inclusion weights from per-worker counts b_i(t).
+
+    The global batch is laid out in ``n_workers`` contiguous blocks of
+    ``global_batch // n_workers`` sequences; worker i's first ``b_i`` slots
+    are included (paper eq. 3 with static shapes).  Returns (global_batch,)
+    float32.
+    """
+    if global_batch % n_workers:
+        raise ValueError(f"global_batch {global_batch} not divisible by "
+                         f"{n_workers} workers")
+    per = global_batch // n_workers
+    idx = jnp.arange(global_batch)
+    return ((idx % per) < b[idx // per]).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Ring gossip along the worker dim (dim 0)
+# ---------------------------------------------------------------------------
+
+def ring_p(n: int, lazy: float = 0.5) -> np.ndarray:
+    """Lazy-Metropolis ring weights (the worker-axis P; circulant)."""
+    if n < 2:
+        return np.ones((1, 1))
+    return cns.metropolis_weights(cns.ring_graph(n), lazy=lazy)
+
+
+def _circulant_taps(p: np.ndarray):
+    """(offsets, weights) such that (P @ m)[i] = sum_k w_k m[(i - o_k) % n].
+
+    Valid for circulant P (any ring).  Offset o corresponds to column
+    j = (-o) % n of row 0.
+    """
+    n = p.shape[0]
+    offsets, weights = [], []
+    for j in range(n):
+        if p[0, j] != 0.0:
+            offsets.append((-j) % n)
+            weights.append(float(p[0, j]))
+    return tuple(offsets), np.asarray(weights, np.float32)
+
+
+def ring_gossip(flat: Array, rounds: int, lazy: float = 0.5) -> Array:
+    """``rounds`` rounds of ring-Metropolis gossip over dim 0 of (n, D).
+
+    Numerically equivalent to ``consensus.gossip(flat, ring_p(n), rounds)``;
+    each round is one K-way weighted combine of the rolled neighbor stacks
+    (K = 3: self + two ring neighbors), fused by the Pallas
+    ``gossip_combine`` kernel on TPU.  ``jnp.roll`` over a worker-sharded
+    dim lowers to a collective-permute under SPMD.
+    """
+    n = flat.shape[0]
+    if n < 2 or rounds < 1:
+        return flat.astype(jnp.float32)
+    offsets, weights = _circulant_taps(ring_p(n, lazy))
+    w = jnp.asarray(weights)
+
+    def one_round(_, m):
+        stacked = jnp.stack([jnp.roll(m, o, axis=0) for o in offsets])
+        out = kops.gossip_combine(stacked.reshape(len(offsets), -1), w)
+        return out.reshape(m.shape)
+
+    return jax.lax.fori_loop(0, rounds, one_round, flat.astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# Exact-consensus train step (eps = 0)
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg, opt, mesh, amb: AMBConfig = AMBConfig()):
+    """step(params, opt_state, batch, b) -> (params, opt_state, metrics).
+
+    ``batch`` is the global batch (leading dim sharded over the worker
+    axes); ``b`` the (n_workers,) per-worker minibatch sizes for this
+    epoch.  The weighted loss's gradient equals the paper's eq.-6 global
+    gradient, and ``opt`` applies the update (dual averaging: z += g,
+    w = prox(z, beta)).
+    """
+    from ..models import lm_loss     # deferred: models imports dist.sharding
+    n = num_workers(mesh)
+
+    def step(params, opt_state, batch, b):
+        gb = jax.tree.leaves(batch)[0].shape[0]
+        per = gb // n
+        sw = seq_weights_from_b(b, gb, n)
+
+        def loss_fn(p):
+            total, m = lm_loss(p, cfg, batch, sw)
+            return total, m
+
+        (_, m), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        new_params, new_state = opt.apply(grads, opt_state, params)
+        metrics = {"loss": m["loss"], "aux": m["aux"], "ntok": m["ntok"],
+                   "global_batch": jnp.sum(jnp.minimum(b, per))}
+        return new_params, new_state, metrics
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# Decentralized gossip train step (per-worker dual replicas)
+# ---------------------------------------------------------------------------
+
+def _prox_leaf(z_leaf, w0_leaf, beta_t, radius: Optional[float]):
+    """Paper eq.-7 prox with h(w) = ||w - w0||^2 (f32 math, w0 dtype out)."""
+    w0f = w0_leaf.astype(jnp.float32)
+    w = w0f - z_leaf / (2.0 * beta_t)
+    if radius is not None:
+        delta = w - w0f
+        nrm = jnp.linalg.norm(delta.reshape(-1))
+        w = w0f + delta * jnp.minimum(1.0, radius / jnp.maximum(nrm, 1e-30))
+    return w.astype(w0_leaf.dtype)
+
+
+def make_gossip_train_step(cfg, mesh, amb: AMBConfig):
+    """Returns (init_state, step) for the decentralized AMB protocol.
+
+    State: ``z`` — per-worker dual replicas, each leaf (n_workers, *param);
+    ``w0`` — the shared init (prox anchor, paper eq. 2); ``t`` — epoch
+    count.  step(state, batch, b) -> (state, metrics).
+    """
+    from ..models import lm_loss     # deferred: models imports dist.sharding
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    n = num_workers(mesh)
+    waxes = worker_axes(mesh)
+    beta, radius = amb.beta, amb.radius
+    rounds = amb.gossip_rounds
+    if amb.graph != "ring":
+        raise NotImplementedError("mesh gossip supports graph='ring'")
+
+    def init_state(params):
+        zshard = NamedSharding(mesh, P(waxes if n > 1 else None))
+
+        def zeros(p):
+            return jax.device_put(jnp.zeros((n,) + p.shape, jnp.float32),
+                                  zshard)
+
+        return {"z": jax.tree.map(zeros, params),
+                "w0": params,        # prox anchor w(1), original dtypes
+                "t": jnp.zeros((), jnp.int32)}
+
+    def step(state, batch, b):
+        gb = jax.tree.leaves(batch)[0].shape[0]
+        per = gb // n
+        t = state["t"]
+        beta_t = beta(t.astype(jnp.float32) + 1.0)   # beta used for w(t)
+        sw = seq_weights_from_b(b, gb, n).reshape(n, per)
+        local = jax.tree.map(
+            lambda x: x.reshape((n, per) + x.shape[1:]), batch)
+
+        def local_grad(z_i, batch_i, sw_i):
+            p_i = jax.tree.map(
+                lambda w0l, zl: _prox_leaf(zl, w0l, beta_t, radius),
+                state["w0"], z_i)
+
+            def loss_fn(p):
+                total, m = lm_loss(p, cfg, batch_i, sw_i)
+                return total, m["loss"]
+
+            (_, loss_i), g_i = jax.value_and_grad(
+                loss_fn, has_aux=True)(p_i)
+            return g_i, loss_i
+
+        grads, losses = jax.vmap(local_grad)(state["z"], local, sw)
+
+        # Messages n*b_i*(z_i + g_i) with the scalar n*b_i alongside, so the
+        # eq.-6 normaliser is agreed by the same consensus (engine parity).
+        bw = jnp.minimum(b, per).astype(jnp.float32)
+        nb = (n * bw)
+        leaves, treedef = jax.tree.flatten(state["z"])
+        gleaves = jax.tree.leaves(grads)
+        sizes = [int(np.prod(l.shape[1:], dtype=np.int64)) for l in leaves]
+        msg = jnp.concatenate(
+            [(nb.reshape((n,) + (1,) * (z.ndim - 1))
+              * (z + g.astype(jnp.float32))).reshape(n, -1)
+             for z, g in zip(leaves, gleaves)] + [nb.reshape(n, 1)], axis=1)
+
+        out = ring_gossip(msg, rounds, amb.lazy) if n > 1 else msg
+        # A worker whose gossip neighborhood processed no samples (scalar
+        # ~ 0, e.g. a straggler-wiped epoch) keeps its dual unchanged —
+        # matching the exact path, where a zero gradient leaves z alone.
+        denom = jnp.maximum(out[:, -1:], 1e-12)
+        zcat = jnp.concatenate([z.reshape(n, -1) for z in leaves], axis=1)
+        zflat = jnp.where(out[:, -1:] > 1e-6, out[:, :-1] / denom, zcat)
+        splits = np.cumsum(sizes)[:-1].tolist()
+        z_new = jax.tree.unflatten(treedef, [
+            part.reshape((n,) + l.shape[1:])
+            for part, l in zip(jnp.split(zflat, splits, axis=1), leaves)])
+
+        bsum = jnp.maximum(bw.sum(), 1.0)
+        metrics = {"loss": jnp.sum(bw * losses) / bsum,
+                   "global_batch": bw.sum(),
+                   "beta": beta(t.astype(jnp.float32) + 2.0)}
+        return {"z": z_new, "w0": state["w0"], "t": t + 1}, metrics
+
+    return init_state, step
+
+
+def gossip_primal(state, amb: AMBConfig):
+    """Node-averaged primal w̄(t) from a gossip-step state (checkpointing /
+    eval): the same prox the train step applies, on the worker-mean dual."""
+    t = state["t"].astype(jnp.float32)
+    beta_t = amb.beta(t + 1.0)
+    return jax.tree.map(
+        lambda w0, z: _prox_leaf(z.mean(0), w0, beta_t, amb.radius),
+        state["w0"], state["z"])

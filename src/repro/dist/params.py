@@ -1,0 +1,95 @@
+"""Rule-based parameter sharding: name x shape -> PartitionSpec.
+
+The layout is FSDP x TP: every weight matrix puts its d_model side on the
+``"data"`` axis (fully-sharded parameters, all-gathered per layer) and its
+wide side — heads, ffn, experts, vocab — on ``"model"`` (tensor parallel).
+Rules are keyed by the leaf's path name so the same function shards model
+params, optimizer-state mirrors of them (``z/...``, ``m/...``), and
+abstract ShapeDtypeStructs identically:
+
+  embed    (V, d)        -> P("model", "data")
+  unembed  (d, V)        -> P("data", "model")
+  in-proj  (d, h*hd|ff)  -> P("data", "model")      wq/wk/wv/w_gate/w_up/...
+  out-proj (h*hd|ff, d)  -> P("model", "data")      wo/w_down/w_out
+  moe      (E, d, ff)    -> P("model", "data", None) expert dim on "model"
+  norms / biases / scalars -> replicated
+
+A leading stacked-layer dim (anything under ``blocks``) is never sharded,
+and any axis whose mesh extent does not divide the dim is dropped (the
+whisper 51865-vocab rule) so indivisible shapes degrade to replication
+instead of erroring.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+# Leaves whose *first* of the two trailing dims is the wide (TP) side.
+_OUT_PROJ = frozenset({"wo", "w_down", "w_out", "decay_b"})
+# MoE in-projections: (E, d, ff) — d_model is the middle dim.
+_MOE_IN = frozenset({"w_gate", "w_up"})
+
+
+def _keep(axis: Optional[str], dim: int, mesh) -> Optional[str]:
+    """Drop an axis the mesh lacks or whose extent does not divide ``dim``."""
+    if axis is None or axis not in mesh.axis_names:
+        return None
+    extent = int(mesh.shape[axis])
+    if extent <= 1 or dim < extent or dim % extent != 0:
+        return None
+    return axis
+
+
+def param_spec(name: str, shape, mesh,
+               fsdp_axis: Optional[str] = "data") -> P:
+    """PartitionSpec for the parameter at path ``name`` with ``shape``.
+
+    ``fsdp_axis=None`` (serving) replicates the d_model side instead of
+    fully sharding it; the TP side stays on "model" either way.
+    """
+    parts = name.split("/")
+    leaf = parts[-1]
+    shape = tuple(int(s) for s in shape)
+    nlead = 1 if "blocks" in parts[:-1] else 0   # vmapped layer stack
+    core = shape[nlead:]
+    if len(core) <= 1:
+        return P()                               # norms, biases, scalars
+
+    data, model = fsdp_axis, "model"
+    spec: list = [None] * len(core)
+    if "moe" in parts and len(core) >= 3:
+        spec[0] = model                          # expert dim
+        spec[1 if leaf in _MOE_IN else len(core) - 1] = data
+    elif leaf == "embed":
+        spec[-2:] = [model, data]                # (vocab, d)
+    elif leaf == "unembed":
+        spec[-2:] = [data, model]                # (d, vocab)
+    elif leaf in _OUT_PROJ:
+        spec[-2:] = [model, data]
+    else:
+        spec[-2:] = [data, model]                # in-projections (default)
+
+    full = [None] * nlead + spec
+    return P(*(_keep(a, d, mesh) for a, d in zip(full, shape)))
+
+
+def _path_name(path) -> str:
+    out = []
+    for k in path:
+        out.append(str(getattr(k, "key", getattr(k, "idx",
+                                                 getattr(k, "name", k)))))
+    return "/".join(out)
+
+
+def tree_shardings(tree, mesh, fsdp_axis: Optional[str] = "data"):
+    """NamedSharding per leaf, by path-keyed :func:`param_spec` rules.
+
+    Works on param trees, optimizer-state trees that mirror them (the rules
+    key on the trailing path components), and ShapeDtypeStruct trees.
+    """
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(
+            mesh, param_spec(_path_name(path), leaf.shape, mesh, fsdp_axis)),
+        tree)

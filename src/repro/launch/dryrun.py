@@ -127,6 +127,8 @@ def _lower_combo(cfg, shape, mesh):
 
 def _costs(compiled) -> dict:
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):   # older jaxlib: one dict per device
+        ca = ca[0] if ca else {}
     return {"flops": float(ca.get("flops", 0.0)),
             "bytes": float(ca.get("bytes accessed", 0.0)),
             "collectives": parse_collectives(compiled.as_text())}

@@ -30,7 +30,8 @@ from ..core.dual_averaging import BetaSchedule
 from ..core.stragglers import ShiftedExponential, amb_batch_sizes, fmb_finish_times
 from ..data import LMTokenStream, shard_batch
 from ..dist import use_sharding
-from ..dist.amb import AMBConfig, make_train_step, num_workers
+from ..dist.amb import (AMBConfig, gossip_primal, make_gossip_train_step,
+                        make_train_step, num_workers)
 from ..dist.params import tree_shardings
 from ..models import init_params
 from ..optim import make_optimizer
@@ -50,6 +51,11 @@ def main(argv=None):
     ap.add_argument("--optimizer", default="dual_averaging",
                     choices=["dual_averaging", "adamw", "sgd"])
     ap.add_argument("--mode", default="amb", choices=["amb", "fmb"])
+    ap.add_argument("--consensus", default="exact",
+                    choices=["exact", "gossip"],
+                    help="exact weighted all-reduce, or decentralized "
+                         "ring gossip with per-worker dual replicas")
+    ap.add_argument("--gossip-rounds", type=int, default=5)
     ap.add_argument("--compute-time", type=float, default=None,
                     help="AMB budget T; default from Lemma 6")
     ap.add_argument("--comm-time", type=float, default=0.5)
@@ -70,10 +76,9 @@ def main(argv=None):
     mu = straggler.mean_batch_time()
     t_budget = args.compute_time or (1.0 + n / gb) * mu
 
+    beta_sched = BetaSchedule(k=50.0, mu=float(gb), scale=200.0)
     if args.optimizer == "dual_averaging":
-        opt = make_optimizer(
-            "dual_averaging",
-            beta=BetaSchedule(k=50.0, mu=float(gb), scale=200.0))
+        opt = make_optimizer("dual_averaging", beta=beta_sched)
     else:
         opt = make_optimizer(args.optimizer)
 
@@ -82,13 +87,26 @@ def main(argv=None):
     logger = metrics_mod.MetricsLogger(
         args.metrics or f"artifacts/train_{args.arch}_{args.mode}.jsonl")
 
+    gossip = args.consensus == "gossip"
+    if gossip and args.optimizer != "dual_averaging":
+        raise SystemExit("--consensus gossip runs the paper's dual-averaging "
+                         "protocol; use --optimizer dual_averaging")
+    amb_cfg = AMBConfig(
+        consensus=args.consensus, gossip_rounds=args.gossip_rounds,
+        beta=beta_sched)
+
     with use_sharding(mesh):
         params = init_params(key, cfg)
         params = jax.tree.map(
             lambda p, sh: jax.device_put(p, sh), params,
             tree_shardings(params, mesh))
-        opt_state = opt.init(params)
-        step_fn = jax.jit(make_train_step(cfg, opt, mesh, AMBConfig()))
+        if gossip:
+            init_state, gstep = make_gossip_train_step(cfg, mesh, amb_cfg)
+            gossip_state = init_state(params)
+            gstep_fn = jax.jit(gstep)
+        else:
+            opt_state = opt.init(params)
+            step_fn = jax.jit(make_train_step(cfg, opt, mesh, amb_cfg))
 
         wall = 0.0
         for step in range(args.steps):
@@ -107,7 +125,10 @@ def main(argv=None):
                                 tuple(a for a in ("pod", "data")
                                       if a in mesh.axis_names))
             t0 = time.time()
-            params, opt_state, m = step_fn(params, opt_state, batch, b)
+            if gossip:
+                gossip_state, m = gstep_fn(gossip_state, batch, b)
+            else:
+                params, opt_state, m = step_fn(params, opt_state, batch, b)
             loss = float(m["loss"])
             logger.log(step, loss=loss, global_batch=float(m["global_batch"]),
                        sim_wall_s=wall, step_s=time.time() - t0)
@@ -116,6 +137,8 @@ def main(argv=None):
                       f"b(t)={float(m['global_batch']):.0f} "
                       f"sim_wall={wall:.1f}s")
         if args.ckpt_dir:
+            if gossip:
+                params = gossip_primal(gossip_state, amb_cfg)
             save_checkpoint(args.ckpt_dir, args.steps, params)
             print(f"checkpoint saved to {args.ckpt_dir}")
     logger.close()
