@@ -1,0 +1,12 @@
+# Repro convenience targets.  `make verify` is the tier-1 gate.
+
+.PHONY: verify verify-fast bench-dist
+
+verify:
+	scripts/verify.sh
+
+verify-fast:          # skip the mesh-heavy subprocess tests
+	scripts/verify.sh -m 'not slow'
+
+bench-dist:
+	PYTHONPATH=src python -m benchmarks.dist_step --steps 6

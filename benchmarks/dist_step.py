@@ -7,7 +7,19 @@ config):
   * ``make_gossip_train_step`` at several round counts r,
   * the ``gossip_combine`` K-way weighted combine: Pallas kernel
     (interpret mode on CPU) vs the pure-jnp reference, at model-sized
-    message widths.
+    message widths,
+  * the ``dist_pipelined`` section: (a) the staleness-1 pipelined step vs
+    the sequential gossip protocol — "sequential" meaning the paper's two
+    distinct windows, a compute-phase dispatch followed by a
+    consensus-phase dispatch, which is exactly the structure pipelining
+    absorbs (the fused one-program sequential step is reported too, for
+    transparency; on CPU hosts the two phases share the same cores, so
+    the measurable win is the eliminated message materialization +
+    dispatch, while on TPU the ICI rounds hide under the backward pass);
+    (b) the 2x16x16 dry-run mesh cost model — lower+compile FLOPs and
+    cross-pod collective-permute bytes per gossip round for each
+    consensus strategy vs the exact all-reduce step (subprocess with 512
+    forced host devices; compile only, never executed).
 
 Writes ``artifacts/bench/BENCH_dist.json`` and prints the
 ``name,us_per_call,derived`` CSV rows (benchmarks/run.py conventions).
@@ -17,6 +29,8 @@ Writes ``artifacts/bench/BENCH_dist.json`` and prints the
 from __future__ import annotations
 
 import os
+import subprocess
+import sys
 
 if "XLA_FLAGS" not in os.environ:
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -111,13 +125,206 @@ def bench_gossip_combine(widths=(1 << 16, 1 << 20)) -> dict:
     return out
 
 
+def bench_pipelined(arch: str, steps: int, seq_len: int,
+                    rounds=(16, 60)) -> dict:
+    """Pipelined step vs the sequential (two-window) gossip protocol.
+
+    The sequential baseline runs the paper's epoch as its two distinct
+    windows — a compute-phase program (masked grads -> packed message)
+    then a consensus-phase program (gossip -> dual update) — which is how
+    an unpipelined system executes T followed by T_c.  The pipelined step
+    runs the same consensus *inside* the compute program, against the
+    previous epoch's message (staleness 1).
+    """
+    from repro.dist.amb import (_local_grads, pack_messages,
+                                strategy_from_config, unpack_duals)
+    from repro.dist.pipeline import make_pipelined_gossip_train_step
+
+    mesh = jax.make_mesh((4, 2), ("data", "model"))
+    cfg = smoke_config(arch)
+    n = num_workers(mesh)
+    per = 2
+    beta = BetaSchedule(k=20.0, mu=1.0, scale=50.0)
+    stream = LMTokenStream(vocab_size=cfg.vocab_size, seq_len=seq_len,
+                           seed=0)
+    b = jnp.array([2, 1, 2, 2], jnp.int32)
+    out: dict = {"arch": arch, "mesh": "4x2", "workers": n,
+                 "seq_len": seq_len,
+                 "note": "sequential = compute-phase dispatch + "
+                         "consensus-phase dispatch (the protocol's two "
+                         "windows); fused = one-program sequential step"}
+
+    with use_sharding(mesh):
+        params = init_params(jax.random.PRNGKey(0), cfg)
+        params = jax.tree.map(jax.device_put, params,
+                              tree_shardings(params, mesh))
+        batch = shard_batch(stream.batch(0, 0, per * n), mesh)
+        for r in rounds:
+            amb = AMBConfig(consensus="gossip", gossip_rounds=r, beta=beta)
+            strategy = strategy_from_config(amb, mesh)
+            init_s, gstep = make_gossip_train_step(cfg, mesh, amb)
+            gs = init_s(params)
+
+            def compute_phase(state, batch, b):
+                beta_t = amb.beta(state["t"].astype(jnp.float32) + 1.0)
+                grads, _ = _local_grads(cfg, state, batch, b, beta_t,
+                                        None, n, per)
+                bw = jnp.minimum(b, per).astype(jnp.float32)
+                return pack_messages(state["z"], grads, n * bw, n)
+
+            def consensus_phase(state, msg):
+                return unpack_duals(strategy.combine(msg), state["z"], n)
+
+            cp, sp = jax.jit(compute_phase), jax.jit(consensus_phase)
+            msg = cp(gs, batch, b)
+            jax.block_until_ready(msg)
+
+            def split_epoch():
+                return sp(gs, cp(gs, batch, b))
+
+            t_split = _time_it(split_epoch, iters=steps)
+            gj = jax.jit(gstep)
+            t_fused = _time_it(lambda: gj(gs, batch, b), iters=steps)
+
+            init_p, pstep, _ = make_pipelined_gossip_train_step(
+                cfg, mesh, amb)
+            pj = jax.jit(pstep)
+            ps, _ = pj(init_p(params), batch, b)   # warm: pending in flight
+            t_pipe = _time_it(lambda: pj(ps, batch, b), iters=steps)
+
+            out[f"r{r}"] = {
+                "sequential_step_s": t_split,
+                "sequential_fused_step_s": t_fused,
+                "pipelined_step_s": t_pipe,
+                "overlap_ratio": t_pipe / t_split,
+                "overlap_demonstrated": bool(t_pipe < t_split),
+            }
+    return out
+
+
+_MULTIPOD_VARIANTS = (("gossip", "torus"), ("gossip_q8", "torus"),
+                      ("gossip_q4", "torus"), ("gossip", "ring"))
+
+
+def multipod_probe(arch: str, seq_len: int) -> dict:
+    """(subprocess body) 2x16x16 lower+compile cost model, JSON to stdout.
+
+    Per consensus strategy: compiled cost-analysis FLOPs and the
+    collective-permute footprint of one gossip round (the fori_loop body
+    appears once in HLO, so the parsed permute bytes *are* per-round),
+    vs the exact-consensus all-reduce step.  The analytic per-worker wire
+    bytes from ``ConsensusStrategy.wire_bytes_per_round`` are reported
+    alongside — on the host backend XLA hoists the uint8->f32 dequant
+    across the roll, so the HLO-parsed bytes understate the quantized
+    strategies' wire savings.
+    """
+    import numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.configs import InputShape
+    from repro.core.dual_averaging import BetaSchedule as BS
+    from repro.dist.amb import make_train_step, strategy_from_config
+    from repro.launch import specs as S
+    from repro.launch.dryrun import _costs
+    from repro.launch.mesh import make_production_mesh
+    from repro.optim import DualAveragingOpt
+
+    mesh = make_production_mesh(multi_pod=True)
+    cfg = smoke_config(arch)
+    n = num_workers(mesh)
+    beta = BS(k=20.0, mu=1.0, scale=50.0)
+    params_sds = S.abstract_params(cfg)
+    pspecs = tree_shardings(params_sds, mesh)
+    as_in = lambda sds, sh: jax.ShapeDtypeStruct(sds.shape, sds.dtype,
+                                                 sharding=sh)
+    params_in = jax.tree.map(as_in, params_sds, pspecs)
+    zsh = NamedSharding(mesh, P(("pod", "data")))
+    state_in = {"z": jax.tree.map(
+                    lambda s: jax.ShapeDtypeStruct((n,) + s.shape,
+                                                   jnp.float32, sharding=zsh),
+                    params_sds),
+                "w0": params_in,
+                "t": jax.ShapeDtypeStruct((), jnp.int32)}
+    shape = InputShape(name="probe", kind="train", global_batch=n,
+                       seq_len=seq_len)
+    batch_in = S.train_input_specs(cfg, shape, mesh)
+    b_in = S.worker_batch_spec(mesh)
+    d_msg = 1 + sum(int(np.prod(p.shape)) for p in
+                    jax.tree.leaves(params_sds))
+
+    out: dict = {"mesh": "2x16x16", "chips": 512, "workers": n,
+                 "arch": arch, "seq_len": seq_len}
+    import time as _t
+    for consensus, graph in _MULTIPOD_VARIANTS:
+        amb = AMBConfig(consensus=consensus, gossip_rounds=1, graph=graph,
+                        beta=beta)
+        with use_sharding(mesh):
+            _, gstep = make_gossip_train_step(cfg, mesh, amb)
+            t0 = _t.time()
+            lowered = jax.jit(gstep).lower(state_in, batch_in, b_in)
+            t1 = _t.time()
+            c = _costs(lowered.compile())
+            t2 = _t.time()
+            strategy = strategy_from_config(amb, mesh)
+        out[f"{consensus}_{graph}"] = {
+            "lower_s": round(t1 - t0, 2), "compile_s": round(t2 - t1, 2),
+            "hlo_flops": c["flops"],
+            "permute_per_round": c["collectives"]["collective-permute"],
+            "all_reduce": c["collectives"]["all-reduce"],
+            "wire_bytes_per_round_per_worker":
+                strategy.wire_bytes_per_round(d_msg),
+        }
+
+    opt = DualAveragingOpt()
+    with use_sharding(mesh):
+        step = make_train_step(cfg, opt, mesh, AMBConfig())
+        opt_sds = jax.eval_shape(opt.init, params_sds)
+        opt_in = jax.tree.map(as_in, opt_sds, tree_shardings(opt_sds, mesh))
+        t0 = _t.time()
+        lowered = jax.jit(step).lower(params_in, opt_in, batch_in, b_in)
+        t1 = _t.time()
+        c = _costs(lowered.compile())
+        t2 = _t.time()
+    out["exact_allreduce"] = {
+        "lower_s": round(t1 - t0, 2), "compile_s": round(t2 - t1, 2),
+        "hlo_flops": c["flops"],
+        "permute": c["collectives"]["collective-permute"],
+        "all_reduce": c["collectives"]["all-reduce"],
+    }
+    return out
+
+
+def bench_multipod(arch: str, seq_len: int) -> dict:
+    """Run :func:`multipod_probe` in a clean 512-device subprocess."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+    env["PYTHONPATH"] = "src"
+    env.pop("JAX_PLATFORMS", None)
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.dist_step", "--multipod-probe",
+         "--arch", arch, "--seq-len", str(seq_len)],
+        capture_output=True, text=True, env=env,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        timeout=1800)
+    if proc.returncode != 0:
+        return {"error": proc.stderr[-2000:]}
+    return json.loads(proc.stdout.splitlines()[-1])
+
+
 def main(argv=None) -> dict:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2-1.5b")
     ap.add_argument("--steps", type=int, default=5)
     ap.add_argument("--seq-len", type=int, default=32)
     ap.add_argument("--out", default="artifacts/bench")
+    ap.add_argument("--skip-multipod", action="store_true",
+                    help="skip the 512-device lower+compile subprocess")
+    ap.add_argument("--multipod-probe", action="store_true",
+                    help=argparse.SUPPRESS)   # internal subprocess mode
     args = ap.parse_args(argv)
+
+    if args.multipod_probe:
+        print(json.dumps(multipod_probe(args.arch, args.seq_len)))
+        return {}
 
     rec = {
         "name": "dist_step",
@@ -125,7 +332,14 @@ def main(argv=None) -> dict:
         "train_steps": bench_train_steps(args.arch, args.steps,
                                          args.seq_len),
         "gossip_combine": bench_gossip_combine(),
+        "dist_pipelined": {
+            "overlap": bench_pipelined(args.arch, args.steps,
+                                       args.seq_len),
+        },
     }
+    if not args.skip_multipod:
+        rec["dist_pipelined"]["multipod_2x16x16"] = bench_multipod(
+            args.arch, args.seq_len)
     outdir = Path(args.out)
     outdir.mkdir(parents=True, exist_ok=True)
     (outdir / "BENCH_dist.json").write_text(json.dumps(rec, indent=2))
@@ -136,6 +350,11 @@ def main(argv=None) -> dict:
     for r in (4, 16, 60):
         print(f"dist_gossip_r{r}_step,{ts[f'gossip_r{r}_step_s'] * 1e6:.0f},"
               f"{ts[f'gossip_r{r}_step_s'] / ts['exact_step_s']:.2f}")
+    for r, row in rec["dist_pipelined"]["overlap"].items():
+        if not isinstance(row, dict):
+            continue
+        print(f"dist_pipelined_{r}_step,{row['pipelined_step_s'] * 1e6:.0f},"
+              f"{row['overlap_ratio']:.3f}")
     print(f"[ok] wrote {outdir / 'BENCH_dist.json'}")
     return rec
 

@@ -1,0 +1,11 @@
+#!/usr/bin/env bash
+# Tier-1 verification, reproducible offline: force the host (CPU) backend
+# so the suite behaves identically with or without accelerators attached.
+# Mesh-heavy subprocess tests force their own device counts internally.
+#
+#   scripts/verify.sh              # full tier-1 run
+#   scripts/verify.sh -m 'not slow'  # skip the mesh-heavy subprocess tests
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export JAX_PLATFORMS=cpu
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} exec python -m pytest -x -q "$@"

@@ -79,8 +79,12 @@ def run_amb_pipelined(objective, model: StragglerModel, cfg: EngineConfig, *,
 
     def epoch(carry, t):
         w, z, clock, stale_gsum, stale_b = carry
+        # Same (ktime, kgrad) derivation as run_amb: epoch 1 (no stale
+        # gradients yet) must draw identical straggler times and hence an
+        # identical global batch; kstale is derived separately.
         key_t = jax.random.fold_in(key, t)
-        ktime, kgrad, kstale = jax.random.split(key_t, 3)
+        ktime, kgrad = jax.random.split(key_t)
+        kstale = jax.random.fold_in(kgrad, 1)
         times = model.per_gradient_times(ktime, n, cfg.b_max)
 
         b = amb_batch_sizes(times, cfg.compute_time)
@@ -159,7 +163,10 @@ def quantize_unbiased(x: Array, bits: int, key: Array) -> Array:
     fl = jnp.floor(u)
     prob = u - fl
     rnd = (jax.random.uniform(key, x.shape) < prob).astype(x.dtype)
-    return lo + (fl + rnd) * scale
+    # Clamp: f32 rounding can put the row max a hair above `levels`, and
+    # the stochastic up-round would then emit level 2^bits — which wraps
+    # to 0 in a uint8 wire format (and overshoots hi here).
+    return lo + jnp.minimum(fl + rnd, levels) * scale
 
 
 def gossip_quantized(messages: Array, p: Array, rounds: int, bits: int,
@@ -268,15 +275,21 @@ def run_amb_quantized(objective, model: StragglerModel, cfg: EngineConfig, *,
 
 @dataclasses.dataclass(frozen=True)
 class AdaptiveBudget:
-    """EMA controller for the per-epoch compute budget T.
+    """EMA controller for the per-epoch compute budget T (online Lemma 6).
 
-    Tracks the aggregate observed rate  r(t) = b(t) / T(t)  (gradients per
-    second across the cluster) and sets
+    Lemma 6 sets  T = (1 + n/b) mu  where mu is the *mean* time a node needs
+    for b/n gradients — an arithmetic mean over nodes.  The controller
+    therefore estimates the mean per-gradient time from the per-node
+    observations  tau_i = T(t) / b_i(t)  and re-solves the lemma each epoch:
 
-        T(t+1) = clip(b_target / r_ema, t_min, t_max).
+        tau_ema(t+1) = ema * tau_ema(t) + (1 - ema) * mean_i T(t)/b_i(t)
+        T(t+1)       = clip((1 + n/b) * (b/n) * tau_ema, t_min, t_max).
 
-    Converges to Lemma 6's T when the straggler distribution is stationary;
-    tracks it when mu drifts.
+    (Inverting the *aggregate* rate b(t)/T(t) instead — the obvious
+    estimator — converges to the harmonic mean of the node rates, which by
+    Jensen undershoots Lemma 6's T whenever node times are random: fast
+    epochs contribute disproportionately many gradients.)  Converges to
+    Lemma 6's T on a stationary cluster; tracks it when mu drifts.
     """
 
     b_target: int
@@ -285,15 +298,22 @@ class AdaptiveBudget:
     t_max: float = 1e6
 
     def init(self, t0: float) -> dict:
-        return {"t_budget": jnp.float32(t0),
-                "rate": jnp.float32(self.b_target / t0)}
+        # tau < 0 marks "no observation yet": the first update adopts the
+        # observed mean per-gradient time outright instead of averaging
+        # against the (possibly badly mis-tuned) implied initial value.
+        return {"t_budget": jnp.float32(t0), "tau": jnp.float32(-1.0)}
 
     def update(self, state: dict, b_observed: Array) -> dict:
-        rate_obs = b_observed.astype(jnp.float32) / state["t_budget"]
-        rate = self.ema * state["rate"] + (1.0 - self.ema) * rate_obs
-        t_new = jnp.clip(self.b_target / jnp.maximum(rate, 1e-9),
+        """``b_observed``: the (n,) per-node minibatch sizes b_i(t)."""
+        b = jnp.maximum(b_observed.astype(jnp.float32), 1.0)
+        tau_obs = jnp.mean(state["t_budget"] / b)
+        tau = jnp.where(state["tau"] < 0.0, tau_obs,
+                        self.ema * state["tau"] + (1.0 - self.ema) * tau_obs)
+        n = b_observed.shape[0]
+        mu = (self.b_target / n) * tau
+        t_new = jnp.clip((1.0 + n / self.b_target) * mu,
                          self.t_min, self.t_max)
-        return {"t_budget": t_new, "rate": rate}
+        return {"t_budget": t_new, "tau": tau}
 
 
 def run_amb_adaptive(objective, model_fn, cfg: EngineConfig, *,
@@ -369,7 +389,7 @@ def _make_adaptive_step(objective, cfg, p, sample_args, f_star, controller):
             lambda zi: prox_step(zi, beta_next, cfg.radius))(z_new)
 
         new_ctrl = controller.update(
-            {"t_budget": t_budget, "rate": ctrl["rate"]}, b.sum())
+            {"t_budget": t_budget, "tau": ctrl["tau"]}, b)
         new_ctrl["last_epoch_time"] = t_budget + cfg.comm_time
         regret_inc = jnp.sum(lsum - bw * f_star)
         metrics = dict(b=b, eps=eps, regret_inc=regret_inc,

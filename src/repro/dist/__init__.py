@@ -1,31 +1,50 @@
 """Distributed AMB on real device meshes — the production substrate.
 
-Public API:
+Layered public API (bottom up):
 
   * :mod:`repro.dist.sharding` — ``use_sharding(mesh)`` context +
     ``constrain`` logical-axis activation annotations (no-op off-mesh).
   * :mod:`repro.dist.params` — rule-based FSDP x TP parameter layout:
     ``param_spec(name, shape, mesh)`` and ``tree_shardings``.
-  * :mod:`repro.dist.amb` — the paper's epoch update as SPMD train steps:
-    ``make_train_step`` (exact consensus, any optimizer),
-    ``make_gossip_train_step`` (per-worker dual replicas, ring-Metropolis
-    gossip over the worker axes, Pallas-fused combine), plus
-    ``seq_weights_from_b`` (eq.-3 variable-minibatch masking) and
+  * :mod:`repro.dist.consensus` — pluggable consensus strategies on the
+    per-worker message stack: ``ExactConsensus`` (eps = 0 all-reduce),
+    ``GossipConsensus`` (tap-decomposed ring/torus Metropolis gossip,
+    Pallas-fused combine, dense fallback for arbitrary graphs), and
+    ``QuantizedGossipConsensus`` (CHOCO-style 8/4-bit delta compression,
+    fused stochastic-quantize + combine kernels); ``make_strategy`` is
+    the factory.
+  * :mod:`repro.dist.amb` — the paper's epoch update as SPMD train
+    steps: ``make_train_step`` (exact consensus, any optimizer) and
+    ``make_gossip_train_step`` (per-worker dual replicas, any strategy),
+    plus ``seq_weights_from_b`` (eq.-3 variable-minibatch masking),
+    ``pack_messages``/``unpack_duals`` (the eq.-6 weighted payload), and
     ``num_workers`` (workers = product of non-"model" axes).
+  * :mod:`repro.dist.pipeline` — ``make_pipelined_gossip_train_step``:
+    the staleness-1 epoch that overlaps epoch t's round-r gossip with
+    epoch t+1's forward/backward (``run_amb_pipelined`` semantics), with
+    a ``flush`` that settles the final in-flight consensus.
 
-The single-device simulator lives in :mod:`repro.core`; this package is the
-same math laid out on a mesh, so scaling PRs (pipelined steps, quantized
-mesh gossip, multi-pod benchmarks) build here.
+The single-device simulator lives in :mod:`repro.core`; this package is
+the same math laid out on a mesh.
 """
 from .sharding import active_mesh, constrain, use_sharding   # noqa: F401
 from .params import param_spec, tree_shardings               # noqa: F401
+from .consensus import (ConsensusStrategy, ExactConsensus,   # noqa: F401
+                        GossipConsensus, QuantizedGossipConsensus,
+                        make_strategy, torus_shape_for_mesh)
 from .amb import (AMBConfig, gossip_primal,                  # noqa: F401
                   make_gossip_train_step, make_train_step, num_workers,
-                  ring_gossip, seq_weights_from_b, worker_axes)
+                  pack_messages, ring_gossip, seq_weights_from_b,
+                  strategy_from_config, unpack_duals, worker_axes)
+from .pipeline import make_pipelined_gossip_train_step       # noqa: F401
 
 __all__ = [
     "active_mesh", "constrain", "use_sharding", "param_spec",
-    "tree_shardings", "AMBConfig", "gossip_primal",
-    "make_gossip_train_step", "make_train_step", "num_workers",
-    "ring_gossip", "seq_weights_from_b", "worker_axes",
+    "tree_shardings", "ConsensusStrategy", "ExactConsensus",
+    "GossipConsensus", "QuantizedGossipConsensus", "make_strategy",
+    "torus_shape_for_mesh", "AMBConfig", "gossip_primal",
+    "make_gossip_train_step", "make_pipelined_gossip_train_step",
+    "make_train_step", "num_workers", "pack_messages", "ring_gossip",
+    "seq_weights_from_b", "strategy_from_config", "unpack_duals",
+    "worker_axes",
 ]

@@ -1,32 +1,37 @@
 """Distributed AMB train steps on real device meshes (paper §3 -> SPMD).
 
-Two implementations of the paper's epoch update, sharing the variable-
-minibatch masking (eq. 3) and the eq.-6 weighted normalisation:
+This module is the thin top of a three-layer stack:
 
-  * :func:`make_train_step` — *exact consensus* (eps = 0, the master/worker
-    limit): one global weighted-loss backward pass.  The per-sequence 0/1
-    weights from ``b_i(t)`` make its gradient exactly
-    ``sum_i b_i g_i / sum_i b_i`` — the r -> infinity limit of gossip —
-    and the update is any :class:`repro.optim.Optimizer` (dual averaging
-    for the paper's protocol, AdamW/SGD baselines).
+  * :mod:`repro.dist.consensus` — pluggable :class:`ConsensusStrategy`
+    implementations (exact all-reduce, tap-decomposed ring/torus gossip,
+    CHOCO-style 8/4-bit quantized gossip) that agree the per-worker
+    message stack ``(n, D) -> (n, D)``.
+  * :mod:`repro.dist.pipeline` — the staleness-1 *pipelined* epoch
+    (``core.extensions.run_amb_pipelined`` semantics): round-r gossip of
+    epoch t overlaps the forward/backward of epoch t+1.
+  * this module — the sequential train steps, sharing the variable-
+    minibatch masking (eq. 3) and the eq.-6 weighted normalisation:
 
-  * :func:`make_gossip_train_step` — *decentralized consensus* (Lemma 1
-    regime): every worker keeps its own dual replica ``z_i``, computes its
-    local masked gradient at its own primal ``w_i = prox(z_i)``, and runs
-    ``r`` synchronous rounds of ring-Metropolis gossip on the messages
-    ``n b_i (z_i + g_i)`` with the scalar ``n b_i`` alongside, so the
-    normaliser b(t) is itself agreed by consensus — the same numerics as
-    :func:`repro.core.consensus.gossip`, but laid out along the mesh worker
-    axes with the K-way weighted combine fused by
-    :mod:`repro.kernels.gossip_combine` on TPU.
+      - :func:`make_train_step` — *exact consensus* (eps = 0, the
+        master/worker limit): one global weighted-loss backward pass whose
+        gradient is exactly ``sum_i b_i g_i / sum_i b_i``, updated by any
+        :class:`repro.optim.Optimizer`.
+      - :func:`make_gossip_train_step` — *decentralized consensus*
+        (Lemma 1 regime): every worker keeps its own dual replica
+        ``z_i``, computes its local masked gradient at its own primal
+        ``w_i = prox(z_i)``, packs the messages ``n b_i (z_i + g_i)``
+        with the scalar ``n b_i`` alongside (so the eq.-6 normaliser is
+        itself agreed by consensus), and hands the stack to whatever
+        :class:`ConsensusStrategy` the :class:`AMBConfig` names.
 
 Workers are the product of the non-"model" mesh axes, so a multi-pod
-("pod", "data", "model") mesh gossips jointly across pod x data.
+("pod", "data", "model") mesh gossips jointly across pod x data; with
+``graph="torus"`` the gossip taps follow the physical (pod, data) extents
+— each roll permutes along exactly one mesh axis.
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Optional
 
 import jax
@@ -35,7 +40,8 @@ import numpy as np
 
 from ..core import consensus as cns
 from ..core.dual_averaging import BetaSchedule
-from ..kernels import ops as kops
+from .consensus import (ConsensusStrategy, GossipConsensus, make_strategy,
+                        torus_shape_for_mesh)
 
 Array = jax.Array
 
@@ -44,12 +50,25 @@ Array = jax.Array
 class AMBConfig:
     """Static AMB step configuration (consensus + dual-averaging knobs)."""
 
-    consensus: str = "exact"          # "exact" | "gossip"
-    gossip_rounds: int = 5            # r (gossip path)
+    consensus: str = "exact"          # exact | gossip | gossip_q8 | gossip_q4
+    gossip_rounds: int = 5            # r (fp32-equivalent budget; quantized
+                                      # strategies get (32/bits)x this)
     graph: str = "ring"               # worker communication graph
+    torus_shape: Optional[tuple] = None   # (rows, cols); default from mesh
     lazy: float = 0.5                 # lazy-Metropolis mixing (PSD P)
     beta: BetaSchedule = BetaSchedule()   # gossip-path dual averaging
     radius: Optional[float] = None
+    seed: int = 0                     # quantized-gossip PRNG stream
+
+
+def strategy_from_config(amb: AMBConfig, mesh) -> ConsensusStrategy:
+    """The configured :class:`ConsensusStrategy` for this mesh's workers."""
+    n = num_workers(mesh)
+    tshape = amb.torus_shape
+    if tshape is None and amb.graph == "torus":
+        tshape = torus_shape_for_mesh(mesh)
+    return make_strategy(amb.consensus, n, rounds=amb.gossip_rounds,
+                         graph=amb.graph, lazy=amb.lazy, torus_shape=tshape)
 
 
 # ---------------------------------------------------------------------------
@@ -84,7 +103,7 @@ def seq_weights_from_b(b: Array, global_batch: int, n_workers: int) -> Array:
 
 
 # ---------------------------------------------------------------------------
-# Ring gossip along the worker dim (dim 0)
+# Ring gossip along the worker dim (compatibility wrappers)
 # ---------------------------------------------------------------------------
 
 def ring_p(n: int, lazy: float = 0.5) -> np.ndarray:
@@ -94,42 +113,52 @@ def ring_p(n: int, lazy: float = 0.5) -> np.ndarray:
     return cns.metropolis_weights(cns.ring_graph(n), lazy=lazy)
 
 
-def _circulant_taps(p: np.ndarray):
-    """(offsets, weights) such that (P @ m)[i] = sum_k w_k m[(i - o_k) % n].
-
-    Valid for circulant P (any ring).  Offset o corresponds to column
-    j = (-o) % n of row 0.
-    """
-    n = p.shape[0]
-    offsets, weights = [], []
-    for j in range(n):
-        if p[0, j] != 0.0:
-            offsets.append((-j) % n)
-            weights.append(float(p[0, j]))
-    return tuple(offsets), np.asarray(weights, np.float32)
-
-
 def ring_gossip(flat: Array, rounds: int, lazy: float = 0.5) -> Array:
     """``rounds`` rounds of ring-Metropolis gossip over dim 0 of (n, D).
 
-    Numerically equivalent to ``consensus.gossip(flat, ring_p(n), rounds)``;
-    each round is one K-way weighted combine of the rolled neighbor stacks
-    (K = 3: self + two ring neighbors), fused by the Pallas
-    ``gossip_combine`` kernel on TPU.  ``jnp.roll`` over a worker-sharded
-    dim lowers to a collective-permute under SPMD.
+    Kept as the historical entry point; now a thin wrapper over
+    :class:`repro.dist.consensus.GossipConsensus` with ``graph="ring"`` —
+    identical taps, identical Pallas combine, identical numerics.
     """
-    n = flat.shape[0]
-    if n < 2 or rounds < 1:
-        return flat.astype(jnp.float32)
-    offsets, weights = _circulant_taps(ring_p(n, lazy))
-    w = jnp.asarray(weights)
+    return GossipConsensus(flat.shape[0], rounds, "ring", lazy).combine(flat)
 
-    def one_round(_, m):
-        stacked = jnp.stack([jnp.roll(m, o, axis=0) for o in offsets])
-        out = kops.gossip_combine(stacked.reshape(len(offsets), -1), w)
-        return out.reshape(m.shape)
 
-    return jax.lax.fori_loop(0, rounds, one_round, flat.astype(jnp.float32))
+# ---------------------------------------------------------------------------
+# Message pack / unpack (shared with repro.dist.pipeline)
+# ---------------------------------------------------------------------------
+
+def pack_messages(z, grads, nb: Array, n: int) -> Array:
+    """Stack ``n b_i (z_i + g_i)`` rows with the scalar ``n b_i`` appended.
+
+    z / grads: trees of (n, *param) leaves; nb: (n,).  Returns (n, D+1)
+    fp32 — the consensus payload whose last column carries the eq.-6
+    normaliser through the same consensus operator.
+    """
+    leaves = jax.tree.leaves(z)
+    gleaves = jax.tree.leaves(grads)
+    return jnp.concatenate(
+        [(nb.reshape((n,) + (1,) * (zl.ndim - 1))
+          * (zl + gl.astype(jnp.float32))).reshape(n, -1)
+         for zl, gl in zip(leaves, gleaves)] + [nb.reshape(n, 1)], axis=1)
+
+
+def unpack_duals(out: Array, z, n: int):
+    """Invert :func:`pack_messages` on a consensus output.
+
+    Normalises by the agreed scalar column; a worker whose gossip
+    neighborhood processed no samples (scalar ~ 0, e.g. a straggler-wiped
+    epoch) keeps its dual unchanged — matching the exact path, where a
+    zero gradient leaves z alone.
+    """
+    leaves, treedef = jax.tree.flatten(z)
+    sizes = [int(np.prod(l.shape[1:], dtype=np.int64)) for l in leaves]
+    denom = jnp.maximum(out[:, -1:], 1e-12)
+    zcat = jnp.concatenate([zl.reshape(n, -1) for zl in leaves], axis=1)
+    zflat = jnp.where(out[:, -1:] > 1e-6, out[:, :-1] / denom, zcat)
+    splits = np.cumsum(sizes)[:-1].tolist()
+    return jax.tree.unflatten(treedef, [
+        part.reshape((n,) + l.shape[1:])
+        for part, l in zip(jnp.split(zflat, splits, axis=1), leaves)])
 
 
 # ---------------------------------------------------------------------------
@@ -181,81 +210,75 @@ def _prox_leaf(z_leaf, w0_leaf, beta_t, radius: Optional[float]):
     return w.astype(w0_leaf.dtype)
 
 
+def _local_grads(cfg, state, batch, b, beta_t, radius, n, per):
+    """vmapped per-worker masked gradients at each worker's own primal.
+
+    Returns (grads tree of (n, *param), losses (n,)).
+    """
+    from ..models import lm_loss     # deferred: models imports dist.sharding
+    sw = seq_weights_from_b(b, n * per, n).reshape(n, per)
+    local = jax.tree.map(
+        lambda x: x.reshape((n, per) + x.shape[1:]), batch)
+
+    def local_grad(z_i, batch_i, sw_i):
+        p_i = jax.tree.map(
+            lambda w0l, zl: _prox_leaf(zl, w0l, beta_t, radius),
+            state["w0"], z_i)
+
+        def loss_fn(p):
+            total, m = lm_loss(p, cfg, batch_i, sw_i)
+            return total, m["loss"]
+
+        (_, loss_i), g_i = jax.value_and_grad(loss_fn, has_aux=True)(p_i)
+        return g_i, loss_i
+
+    return jax.vmap(local_grad)(state["z"], local, sw)
+
+
+def _init_gossip_state(params, mesh, n, waxes):
+    """Per-worker dual replicas sharded along the worker axes."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    zshard = NamedSharding(mesh, P(waxes if n > 1 else None))
+
+    def zeros(p):
+        return jax.device_put(jnp.zeros((n,) + p.shape, jnp.float32),
+                              zshard)
+
+    return {"z": jax.tree.map(zeros, params),
+            "w0": params,            # prox anchor w(1), original dtypes
+            "t": jnp.zeros((), jnp.int32)}
+
+
 def make_gossip_train_step(cfg, mesh, amb: AMBConfig):
     """Returns (init_state, step) for the decentralized AMB protocol.
 
     State: ``z`` — per-worker dual replicas, each leaf (n_workers, *param);
     ``w0`` — the shared init (prox anchor, paper eq. 2); ``t`` — epoch
-    count.  step(state, batch, b) -> (state, metrics).
+    count.  step(state, batch, b) -> (state, metrics).  The consensus
+    phase is whatever :class:`ConsensusStrategy` ``amb`` names (exact
+    average, ring/torus gossip, quantized gossip).
     """
-    from ..models import lm_loss     # deferred: models imports dist.sharding
-    from jax.sharding import NamedSharding, PartitionSpec as P
-
     n = num_workers(mesh)
     waxes = worker_axes(mesh)
     beta, radius = amb.beta, amb.radius
-    rounds = amb.gossip_rounds
-    if amb.graph != "ring":
-        raise NotImplementedError("mesh gossip supports graph='ring'")
+    strategy = strategy_from_config(amb, mesh)
+    qkey = jax.random.PRNGKey(amb.seed)
 
     def init_state(params):
-        zshard = NamedSharding(mesh, P(waxes if n > 1 else None))
-
-        def zeros(p):
-            return jax.device_put(jnp.zeros((n,) + p.shape, jnp.float32),
-                                  zshard)
-
-        return {"z": jax.tree.map(zeros, params),
-                "w0": params,        # prox anchor w(1), original dtypes
-                "t": jnp.zeros((), jnp.int32)}
+        return _init_gossip_state(params, mesh, n, waxes)
 
     def step(state, batch, b):
         gb = jax.tree.leaves(batch)[0].shape[0]
         per = gb // n
         t = state["t"]
         beta_t = beta(t.astype(jnp.float32) + 1.0)   # beta used for w(t)
-        sw = seq_weights_from_b(b, gb, n).reshape(n, per)
-        local = jax.tree.map(
-            lambda x: x.reshape((n, per) + x.shape[1:]), batch)
+        grads, losses = _local_grads(cfg, state, batch, b, beta_t, radius,
+                                     n, per)
 
-        def local_grad(z_i, batch_i, sw_i):
-            p_i = jax.tree.map(
-                lambda w0l, zl: _prox_leaf(zl, w0l, beta_t, radius),
-                state["w0"], z_i)
-
-            def loss_fn(p):
-                total, m = lm_loss(p, cfg, batch_i, sw_i)
-                return total, m["loss"]
-
-            (_, loss_i), g_i = jax.value_and_grad(
-                loss_fn, has_aux=True)(p_i)
-            return g_i, loss_i
-
-        grads, losses = jax.vmap(local_grad)(state["z"], local, sw)
-
-        # Messages n*b_i*(z_i + g_i) with the scalar n*b_i alongside, so the
-        # eq.-6 normaliser is agreed by the same consensus (engine parity).
         bw = jnp.minimum(b, per).astype(jnp.float32)
-        nb = (n * bw)
-        leaves, treedef = jax.tree.flatten(state["z"])
-        gleaves = jax.tree.leaves(grads)
-        sizes = [int(np.prod(l.shape[1:], dtype=np.int64)) for l in leaves]
-        msg = jnp.concatenate(
-            [(nb.reshape((n,) + (1,) * (z.ndim - 1))
-              * (z + g.astype(jnp.float32))).reshape(n, -1)
-             for z, g in zip(leaves, gleaves)] + [nb.reshape(n, 1)], axis=1)
-
-        out = ring_gossip(msg, rounds, amb.lazy) if n > 1 else msg
-        # A worker whose gossip neighborhood processed no samples (scalar
-        # ~ 0, e.g. a straggler-wiped epoch) keeps its dual unchanged —
-        # matching the exact path, where a zero gradient leaves z alone.
-        denom = jnp.maximum(out[:, -1:], 1e-12)
-        zcat = jnp.concatenate([z.reshape(n, -1) for z in leaves], axis=1)
-        zflat = jnp.where(out[:, -1:] > 1e-6, out[:, :-1] / denom, zcat)
-        splits = np.cumsum(sizes)[:-1].tolist()
-        z_new = jax.tree.unflatten(treedef, [
-            part.reshape((n,) + l.shape[1:])
-            for part, l in zip(jnp.split(zflat, splits, axis=1), leaves)])
+        msg = pack_messages(state["z"], grads, n * bw, n)
+        out = strategy.combine(msg, key=jax.random.fold_in(qkey, t))
+        z_new = unpack_duals(out, state["z"], n)
 
         bsum = jnp.maximum(bw.sum(), 1.0)
         metrics = {"loss": jnp.sum(bw * losses) / bsum,

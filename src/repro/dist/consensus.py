@@ -1,0 +1,363 @@
+"""Pluggable consensus strategies for the mesh AMB stack (paper §3).
+
+The consensus phase of the paper's epoch update is an operator on the
+per-worker message stack: ``(n, D) -> (n, D)``.  The train steps in
+:mod:`repro.dist.amb` and :mod:`repro.dist.pipeline` are written against
+the :class:`ConsensusStrategy` interface and stay agnostic to *how* the
+workers agree:
+
+  * :class:`ExactConsensus` — the r -> infinity / master-worker limit
+    (eps = 0): every worker ends up holding the global mean.  On a mesh
+    this lowers to one all-reduce over the worker axes.
+  * :class:`GossipConsensus` — r synchronous rounds of Metropolis gossip
+    over any :func:`repro.core.consensus.build_graph` topology.  For
+    group-circulant graphs (ring over Z_n, torus over Z_rows x Z_cols —
+    the TPU ICI shapes) each round decomposes into K neighbor taps:
+    rolls of the worker dim (collective-permutes under SPMD) plus one
+    fused K-way weighted combine
+    (:func:`repro.kernels.gossip_combine.gossip_combine_pallas`).
+    Non-decomposable graphs (star, Erdos-Renyi, the paper's Fig. 2 graph)
+    fall back to the dense ``P @ m`` of :func:`repro.core.consensus.gossip`.
+  * :class:`QuantizedGossipConsensus` — the same taps, but each round's
+    wire message is the CHOCO-style stochastically-quantized *delta*
+    against a public replica, exactly the numerics of
+    :func:`repro.core.extensions.gossip_quantized` (8/4-bit), with the
+    quantize and dequantize+combine halves fused by the Pallas kernels in
+    :mod:`repro.kernels.gossip_combine`.  The uint8 level planes (2/byte
+    at 4-bit) are what crosses the ICI — (32/bits)x more rounds per T_c
+    byte budget.
+
+:func:`make_strategy` builds the right strategy from an
+:class:`repro.dist.amb.AMBConfig` plus the mesh (the torus shape defaults
+to the physical worker-axis extents).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import consensus as cns
+from ..kernels import ops as kops
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Group-circulant tap decomposition
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Taps:
+    """``(P @ m)[i] = sum_k weights[k] * m[i + offsets[k]]`` over Z_shape.
+
+    ``shape`` is the cyclic-group factorization of the worker index —
+    ``(n,)`` for a ring, ``(rows, cols)`` for a torus.  Implemented as
+    ``roll(m, -offset)`` per tap, which lowers to a collective-permute
+    when the rolled dims are mesh-sharded.
+    """
+
+    offsets: tuple            # tuple of int tuples, one per tap
+    weights: np.ndarray       # (K,) float32, self tap first
+    shape: tuple              # cyclic-group shape, prod(shape) == n
+
+    @property
+    def k(self) -> int:
+        return len(self.offsets)
+
+
+def group_taps(p: np.ndarray, shape: Sequence[int]) -> Optional[Taps]:
+    """Decompose a group-circulant P into neighbor taps, or None.
+
+    Valid iff ``P[i, j]`` depends only on the elementwise difference
+    ``coord(j) - coord(i)`` mod ``shape`` (true for Metropolis weights on
+    any vertex-transitive graph laid out over the cyclic group — ring,
+    torus).  Validated by reconstructing P; returns None on mismatch so
+    callers can fall back to the dense operator.
+    """
+    shape = tuple(int(s) for s in shape)
+    n = p.shape[0]
+    if int(np.prod(shape)) != n:
+        return None
+    offsets, weights = [], []
+    for j in range(n):
+        if p[0, j] != 0.0:
+            offsets.append(np.unravel_index(j, shape))
+            weights.append(float(p[0, j]))
+    # self tap first (offset all-zeros), if present
+    order = sorted(range(len(offsets)),
+                   key=lambda i: (any(offsets[i]), offsets[i]))
+    offsets = [offsets[i] for i in order]
+    weights = [weights[i] for i in order]
+    # validate: rebuild P from the taps
+    rebuilt = np.zeros_like(p)
+    coords = np.stack(np.unravel_index(np.arange(n), shape), axis=1)
+    for off, w in zip(offsets, weights):
+        dest = np.ravel_multi_index(
+            tuple((coords[:, a] + off[a]) % shape[a]
+                  for a in range(len(shape))), shape)
+        rebuilt[np.arange(n), dest] += w
+    if not np.allclose(rebuilt, p, atol=1e-12):
+        return None
+    return Taps(offsets=tuple(tuple(int(o) for o in off) for off in offsets),
+                weights=np.asarray(weights, np.float32), shape=shape)
+
+
+def roll_by_offset(x: Array, taps: Taps, off) -> Array:
+    """``out[i] = x[i + off]`` over the taps' cyclic group (one tap)."""
+    full = x.reshape(taps.shape + x.shape[1:])
+    axes = tuple(range(len(taps.shape)))
+    return jnp.roll(full, tuple(-o for o in off), axis=axes).reshape(x.shape)
+
+
+def _roll_taps(m: Array, taps: Taps) -> Array:
+    """Stack the rolled neighbor views: (K, n, ...) from (n, ...)."""
+    return jnp.stack([roll_by_offset(m, taps, off) for off in taps.offsets])
+
+
+# ---------------------------------------------------------------------------
+# Strategy interface
+# ---------------------------------------------------------------------------
+
+class ConsensusStrategy:
+    """Operator on the per-worker message stack: (n, D) -> (n, D).
+
+    ``combine`` runs the whole consensus phase (all rounds).  ``key`` is
+    only consumed by stochastic strategies (quantized gossip) and may be
+    None otherwise.  ``wire_bytes_per_round`` is the per-worker payload a
+    single round puts on the interconnect — what the multi-pod benchmarks
+    report.
+    """
+
+    name: str = "base"
+
+    def combine(self, msg: Array, key: Optional[Array] = None) -> Array:
+        raise NotImplementedError
+
+    def wire_bytes_per_round(self, d: int) -> int:
+        raise NotImplementedError
+
+    def __call__(self, msg: Array, key: Optional[Array] = None) -> Array:
+        return self.combine(msg, key)
+
+
+@dataclasses.dataclass(frozen=True)
+class ExactConsensus(ConsensusStrategy):
+    """eps = 0: every worker holds the global mean (one all-reduce)."""
+
+    n: int
+    name: str = dataclasses.field(default="exact", init=False)
+
+    def combine(self, msg: Array, key: Optional[Array] = None) -> Array:
+        return cns.exact_average(msg.astype(jnp.float32))
+
+    def wire_bytes_per_round(self, d: int) -> int:
+        return 4 * d          # fp32 all-reduce payload (ring: 2x in+out)
+
+
+class _TapGossip(ConsensusStrategy):
+    """Shared P/tap construction for the gossip strategies."""
+
+    def __init__(self, n: int, rounds: int, graph: str = "ring",
+                 lazy: float = 0.5, torus_shape: Optional[tuple] = None):
+        self.n = int(n)
+        self.rounds = int(rounds)
+        self.graph = graph
+        self.lazy = float(lazy)
+        if n < 2:
+            self.p, self.taps = np.ones((1, 1)), None
+            return
+        if graph == "torus":
+            rows, cols = torus_shape or _default_torus(n)
+            if rows * cols != n:
+                raise ValueError(f"torus {rows}x{cols} != {n} workers")
+            adj = cns.torus_graph(rows, cols)
+            shape = (rows, cols)
+        else:
+            adj = cns.build_graph(graph, n)
+            shape = (n,)
+        self.p = cns.metropolis_weights(adj, lazy=lazy)
+        self.taps = group_taps(self.p, shape)
+
+    def wire_bytes_per_round(self, d: int) -> int:
+        k = self.taps.k if self.taps is not None else self.n
+        return 4 * d * (k - 1)     # fp32 message to each neighbor
+
+
+class GossipConsensus(_TapGossip):
+    """r rounds of Metropolis gossip; tap-decomposed where possible.
+
+    Per round (group-circulant graphs): one roll per neighbor tap — a
+    collective-permute under SPMD — and one fused K-way weighted combine
+    on TPU.  Numerically identical to
+    ``repro.core.consensus.gossip(m, P, rounds)``.
+    """
+
+    name = "gossip"
+
+    def combine(self, msg: Array, key: Optional[Array] = None) -> Array:
+        m = msg.astype(jnp.float32)
+        if self.n < 2 or self.rounds < 1:
+            return m
+        if self.taps is None:        # dense fallback (non-circulant graph)
+            return cns.gossip(m, jnp.asarray(self.p, jnp.float32),
+                              self.rounds)
+        w = jnp.asarray(self.taps.weights)
+
+        def one_round(_, cur):
+            stacked = _roll_taps(cur, self.taps)
+            out = kops.gossip_combine(
+                stacked.reshape(self.taps.k, -1), w)
+            return out.reshape(cur.shape)
+
+        return jax.lax.fori_loop(0, self.rounds, one_round, m)
+
+
+class QuantizedGossipConsensus(_TapGossip):
+    """Delta-compressed gossip: ``repro.core.extensions.gossip_quantized``
+    laid out along the mesh worker axes.
+
+    Every worker keeps a public replica ``h`` of its own value and one
+    running replica per neighbor tap; each round it stochastically
+    quantizes ``m - h`` onto a per-worker uniform grid (``bits`` bits),
+    sends only the uint8 level plane plus two grid scalars, and combines
+    ``m <- P_ii m + sum_k P_ik hnbr_k`` — the self term stays exact, the
+    delta magnitude (hence injected noise) decays with consensus.  Given
+    the same per-round uniform draws this reproduces ``gossip_quantized``
+    exactly; the rounds budget is scaled by the caller ((32/bits)x per
+    T_c).  Requires a PRNG ``key``.
+    """
+
+    name = "gossip_q"
+
+    def __init__(self, n: int, rounds: int, bits: int = 8,
+                 graph: str = "ring", lazy: float = 0.5,
+                 torus_shape: Optional[tuple] = None):
+        super().__init__(n, rounds, graph, lazy, torus_shape)
+        if bits not in (4, 8):
+            raise ValueError("bits must be 4 or 8 (uint8 wire container)")
+        self.bits = int(bits)
+        self.name = f"gossip_q{bits}"
+
+    def wire_bytes_per_round(self, d: int) -> int:
+        # uint8 level container; 4-bit packs two levels per byte (the
+        # per-tap payload actually put on the wire by _pack/_unpack), plus
+        # the two f32 grid scalars per neighbor message.
+        k = self.taps.k if self.taps is not None else self.n
+        per_msg = (-(-d // 2) if self.bits == 4 else d) + 8
+        return per_msg * (k - 1)
+
+    def _pack(self, lvl: Array) -> Array:
+        """4-bit wire format: two levels per byte (lossless)."""
+        if self.bits != 4:
+            return lvl
+        n, d = lvl.shape
+        if d % 2:
+            lvl = jnp.pad(lvl, ((0, 0), (0, 1)))
+        return lvl[:, ::2] | (lvl[:, 1::2] << 4)
+
+    def _unpack(self, packed: Array, d: int) -> Array:
+        if self.bits != 4:
+            return packed
+        both = jnp.stack([packed & 0xF, packed >> 4], axis=-1)
+        return both.reshape(both.shape[0], -1)[:, :d]
+
+    def combine(self, msg: Array, key: Optional[Array] = None) -> Array:
+        if key is None:
+            raise ValueError("QuantizedGossipConsensus needs a PRNG key")
+        m = msg.astype(jnp.float32)
+        if self.n < 2 or self.rounds < 1:
+            return m
+        # the fused path needs the self tap first (w[0] multiplies m)
+        if self.taps is None or any(self.taps.offsets[0]):
+            from ..core.extensions import gossip_quantized
+            return gossip_quantized(m, jnp.asarray(self.p, jnp.float32),
+                                    self.rounds, self.bits, key)
+        taps = self.taps
+        levels = float(2 ** self.bits - 1)
+        d = m.shape[1]
+        w = jnp.asarray(taps.weights)
+        km1 = taps.k - 1
+        nbr_offsets = taps.offsets[1:]
+
+        def one_round(k_round, carry):
+            cur, h, hnbr = carry
+            # -- send half: stochastic-quantize the delta, update replica
+            diff = cur - h
+            lo = diff.min(axis=-1, keepdims=True)
+            hi = diff.max(axis=-1, keepdims=True)
+            scale = jnp.maximum(hi - lo, 1e-12) / levels
+            rnd = jax.random.uniform(jax.random.fold_in(key, k_round),
+                                     cur.shape)
+            lvl, h_new = kops.stochastic_quantize(cur, h, rnd, lo, scale,
+                                                  levels)
+            # -- the wire: rolled (nibble-packed) level planes + scalars
+            wire = self._pack(lvl)
+            lvl_r = jnp.stack([
+                self._unpack(roll_by_offset(wire, taps, o), d)
+                for o in nbr_offsets])
+            lo_r = jnp.stack([roll_by_offset(lo, taps, o)
+                              for o in nbr_offsets])
+            sc_r = jnp.stack([roll_by_offset(scale, taps, o)
+                              for o in nbr_offsets])
+            # -- receive half: fused dequantize + replica update + combine
+            out, hnbr_new = kops.quantized_combine(
+                cur, hnbr, lvl_r, lo_r, sc_r, w)
+            return out, h_new, hnbr_new
+
+        h0 = jnp.zeros_like(m)
+        hnbr0 = jnp.zeros((km1,) + m.shape, jnp.float32)
+        out, _, _ = jax.lax.fori_loop(0, self.rounds, one_round,
+                                      (m, h0, hnbr0))
+        return out
+
+
+# ---------------------------------------------------------------------------
+# Factory
+# ---------------------------------------------------------------------------
+
+def _default_torus(n: int) -> tuple:
+    rows = int(np.sqrt(n))
+    while n % rows:
+        rows -= 1
+    return rows, n // rows
+
+
+def torus_shape_for_mesh(mesh) -> Optional[tuple]:
+    """The physical worker-axis extents as the torus (rows, cols).
+
+    A ("pod", "data", "model") mesh gossips over pod x data, so the
+    natural torus is (pod_extent, data_extent) — each roll then permutes
+    along exactly one physical mesh axis.  Single-worker-axis meshes fall
+    back to the most-square factorization.
+    """
+    waxes = [a for a in mesh.axis_names if a != "model"]
+    if len(waxes) == 2:
+        return int(mesh.shape[waxes[0]]), int(mesh.shape[waxes[1]])
+    return None
+
+
+CONSENSUS_CHOICES = ("exact", "gossip", "gossip_q8", "gossip_q4")
+
+
+def make_strategy(name: str, n: int, *, rounds: int = 5,
+                  graph: str = "ring", lazy: float = 0.5,
+                  torus_shape: Optional[tuple] = None) -> ConsensusStrategy:
+    """Build a strategy from the AMBConfig vocabulary.
+
+    ``name`` in {"exact", "gossip", "gossip_q8", "gossip_q4"}.  Quantized
+    strategies get (32/bits)x the rounds — same T_c byte budget.
+    """
+    if name == "exact":
+        return ExactConsensus(n)
+    if name == "gossip":
+        return GossipConsensus(n, rounds, graph, lazy, torus_shape)
+    if name in ("gossip_q8", "gossip_q4"):
+        bits = int(name[-1])
+        return QuantizedGossipConsensus(n, rounds * 32 // bits, bits,
+                                        graph, lazy, torus_shape)
+    raise ValueError(f"unknown consensus strategy {name!r}; "
+                     f"choose from {CONSENSUS_CHOICES}")

@@ -1,0 +1,128 @@
+"""Staleness-1 pipelined AMB epochs on the mesh (compute/gossip overlap).
+
+The paper's protocol leaves the ICI idle during the compute window T and
+the compute units idle during the consensus window T_c.
+:func:`repro.core.extensions.run_amb_pipelined` (after Al-Lawati & Draper
+2020 / Dekel et al. 2012) shows the staleness-1 overlap preserves
+convergence; this module is the mesh realisation: the round-r gossip of
+epoch t's message runs *during* the forward/backward of epoch t+1.
+
+Mechanically, one jitted :func:`make_pipelined_gossip_train_step` step of
+epoch t:
+
+  1. starts the consensus of the **pending** message enqueued by epoch
+     t-1 (data-independent of this epoch's batch, so XLA's latency-hiding
+     scheduler overlaps its collective-permutes with the backward pass),
+  2. computes the local masked gradients at the *stale* primal
+     ``w_i = prox(z_i(t-1))`` — the iterate each worker holds while the
+     previous epoch's gossip is still in flight (staleness-1 delayed
+     gradients),
+  3. folds the finished consensus into the dual, and enqueues this
+     epoch's message ``n b_i (z_i(t) + g_i)`` for the *next* step's
+     overlap window.
+
+``flush`` completes the last pending consensus without any new compute —
+after a flush, a 1-step pipelined chain equals the sequential
+:func:`repro.dist.amb.make_gossip_train_step` chain exactly (same
+messages, same gossip operator, one step later); tests assert this.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .amb import (AMBConfig, _init_gossip_state, _local_grads, num_workers,
+                  pack_messages, strategy_from_config, unpack_duals,
+                  worker_axes)
+
+Array = jax.Array
+
+
+def _msg_width(params) -> int:
+    """Total flattened parameter size + 1 (the appended eq.-6 scalar)."""
+    return 1 + sum(int(np.prod(p.shape, dtype=np.int64))
+                   for p in jax.tree.leaves(params))
+
+
+def make_pipelined_gossip_train_step(cfg, mesh, amb: AMBConfig):
+    """Returns (init_state, step, flush) for the pipelined AMB protocol.
+
+    State extends the sequential gossip state with ``pending`` — the
+    (n, D+1) consensus payload of the previous epoch, still "in flight".
+    step(state, batch, b) -> (state, metrics); flush(state) -> state
+    completes the final pending consensus (no gradients).
+
+    Epoch t's gradients are evaluated at the staleness-1 primal (dual
+    through epoch t-2's consensus) but accumulate onto the freshly agreed
+    dual — the delayed-gradient semantics of
+    :func:`repro.core.extensions.run_amb_pipelined`.
+    """
+    n = num_workers(mesh)
+    waxes = worker_axes(mesh)
+    beta, radius = amb.beta, amb.radius
+    strategy = strategy_from_config(amb, mesh)
+    qkey = jax.random.PRNGKey(amb.seed)
+
+    def init_state(params):
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        state = _init_gossip_state(params, mesh, n, waxes)
+        state["pending"] = jax.device_put(
+            jnp.zeros((n, _msg_width(params)), jnp.float32),
+            NamedSharding(mesh, P(waxes if n > 1 else None)))
+        return state
+
+    def _settle(state):
+        """Consensus of the pending message -> the agreed dual.
+
+        The zero "pending" of the very first epoch (and of a flushed
+        state) carries a zero normaliser column, so :func:`unpack_duals`'
+        empty-neighborhood guard leaves z untouched — no flag needed.
+
+        The quantize key is derived from the *enqueuing* epoch (t - 1),
+        so a pipelined chain settles each message with exactly the key
+        the sequential step would have used.
+        """
+        out = strategy.combine(state["pending"],
+                               key=jax.random.fold_in(qkey, state["t"] - 1))
+        return unpack_duals(out, state["z"], n)
+
+    def step(state, batch, b):
+        gb = jax.tree.leaves(batch)[0].shape[0]
+        per = gb // n
+        t = state["t"]
+        beta_t = beta(t.astype(jnp.float32) + 1.0)
+
+        # (1) consensus of epoch t-1's message — no data dependency on
+        # (2), so its collective-permutes overlap the backward pass.
+        z_new = _settle(state)
+
+        # (2) fwd/bwd at the stale primal prox(z(t-1)) — staleness 1.
+        grads, losses = _local_grads(cfg, state, batch, b, beta_t, radius,
+                                     n, per)
+
+        # (3) enqueue this epoch's message on the freshly agreed dual.
+        bw = jnp.minimum(b, per).astype(jnp.float32)
+        pending = pack_messages(z_new, grads, n * bw, n)
+
+        bsum = jnp.maximum(bw.sum(), 1.0)
+        metrics = {"loss": jnp.sum(bw * losses) / bsum,
+                   "global_batch": bw.sum(),
+                   "beta": beta(t.astype(jnp.float32) + 2.0)}
+        new_state = {"z": z_new, "w0": state["w0"], "t": t + 1,
+                     "pending": pending}
+        return new_state, metrics
+
+    def flush(state):
+        """Complete the in-flight consensus; clears the pipeline.
+
+        ``t`` is NOT advanced: after k steps + flush the state holds the
+        dual through message k — exactly the sequential chain's state at
+        t = k — so downstream beta(t)-dependent consumers
+        (:func:`repro.dist.amb.gossip_primal` checkpoints) agree.
+        """
+        z_new = _settle(state)
+        return {"z": z_new, "w0": state["w0"], "t": state["t"],
+                "pending": jnp.zeros_like(state["pending"])}
+
+    return init_state, step, flush

@@ -15,7 +15,8 @@ import jax.numpy as jnp
 from . import ref
 from .dual_update import dual_update_pallas
 from .flash_attention import flash_attention_pallas
-from .gossip_combine import gossip_combine_pallas
+from .gossip_combine import (gossip_combine_pallas, quantized_combine_pallas,
+                             stochastic_quantize_pallas)
 from .rwkv6_scan import rwkv6_scan_pallas
 
 Array = jax.Array
@@ -50,6 +51,30 @@ def gossip_combine(msgs: Array, weights: Array,
     if force == "ref" or not _on_tpu():
         return ref.gossip_combine_ref(msgs, weights)
     return gossip_combine_pallas(msgs, weights)
+
+
+def stochastic_quantize(m: Array, h: Array, rnd: Array, lo: Array,
+                        scale: Array, levels: float = 255.0,
+                        force: Optional[str] = None):
+    """Send half of a quantized gossip round: (levels u8, updated replica)."""
+    if force == "pallas_interpret":
+        return stochastic_quantize_pallas(m, h, rnd, lo, scale,
+                                          levels=levels, interpret=True)
+    if force == "ref" or not _on_tpu():
+        return ref.stochastic_quantize_ref(m, h, rnd, lo, scale, levels)
+    return stochastic_quantize_pallas(m, h, rnd, lo, scale, levels=levels)
+
+
+def quantized_combine(m: Array, hnbr: Array, lvl: Array, lo: Array,
+                      scale: Array, weights: Array,
+                      force: Optional[str] = None):
+    """Receive half: fused dequantize + replica update + K-way combine."""
+    if force == "pallas_interpret":
+        return quantized_combine_pallas(m, hnbr, lvl, lo, scale, weights,
+                                        interpret=True)
+    if force == "ref" or not _on_tpu():
+        return ref.quantized_combine_ref(m, hnbr, lvl, lo, scale, weights)
+    return quantized_combine_pallas(m, hnbr, lvl, lo, scale, weights)
 
 
 def flash_attention(q: Array, k: Array, v: Array, *, causal: bool = True,

@@ -28,6 +28,41 @@ def gossip_combine_ref(msgs: Array, weights: Array) -> Array:
                       msgs.astype(jnp.float32))
 
 
+def stochastic_quantize_ref(m: Array, h: Array, rnd: Array, lo: Array,
+                            scale: Array, levels: float = 255.0):
+    """Send half of a quantized gossip round (see gossip_combine kernels).
+
+    Returns (levels (n, d) uint8, h_new (n, d) f32): stochastic rounding of
+    ``m - h`` onto the row grid (lo, scale, ``levels = 2^bits - 1`` steps)
+    using the uniform draws ``rnd``, plus the updated public replica
+    ``h + lo + levels * scale``.
+    """
+    diff = m.astype(jnp.float32) - h.astype(jnp.float32)
+    u = (diff - lo.astype(jnp.float32)) / scale.astype(jnp.float32)
+    fl = jnp.floor(u)
+    lvl = jnp.minimum(fl + (rnd < (u - fl)).astype(jnp.float32),
+                      float(levels))
+    h_new = h.astype(jnp.float32) + lo + lvl * scale
+    return lvl.astype(jnp.uint8), h_new
+
+
+def quantized_combine_ref(m: Array, hnbr: Array, lvl: Array, lo: Array,
+                          scale: Array, weights: Array):
+    """Receive half: dequantize K-1 neighbor deltas, update replicas, combine.
+
+    m: (n, d); hnbr: (K-1, n, d); lvl: (K-1, n, d) uint8; lo, scale:
+    (K-1, n, 1); weights: (K,).  Returns (out (n, d), hnbr_new (K-1, n, d)).
+    """
+    w = weights.astype(jnp.float32)
+    hnbr_new = (hnbr.astype(jnp.float32)
+                + lo.astype(jnp.float32)
+                + lvl.astype(jnp.float32) * scale.astype(jnp.float32))
+    out = w[0] * m.astype(jnp.float32)
+    for j in range(hnbr.shape[0]):
+        out = out + w[j + 1] * hnbr_new[j]
+    return out, hnbr_new
+
+
 def flash_attention_ref(q: Array, k: Array, v: Array, *, causal: bool = True,
                         window: int = 0, q_offset: int = 0) -> Array:
     """Naive softmax attention oracle.

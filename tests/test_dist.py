@@ -64,6 +64,7 @@ def test_seq_weights_from_b():
     np.testing.assert_array_equal(np.asarray(w), want)
 
 
+@pytest.mark.slow
 def test_exact_train_step_descends_on_mesh():
     """Distributed-step machinery: variable-b masking, sharding, descent.
 
@@ -127,6 +128,7 @@ def test_exact_train_step_descends_on_mesh():
     assert "E0" in out and "ZN" in out
 
 
+@pytest.mark.slow
 def test_gossip_train_step_on_mesh():
     """Decentralized gossip path correctness on a mesh:
 
@@ -196,6 +198,7 @@ def test_gossip_train_step_on_mesh():
     assert "spread60" in out and "err" in out
 
 
+@pytest.mark.slow
 def test_dryrun_small_mesh_subprocess():
     """run_one end-to-end on a reduced mesh: proves the dry-run machinery."""
     out = run_sub("""
@@ -215,6 +218,7 @@ def test_dryrun_small_mesh_subprocess():
     assert "OK" in out
 
 
+@pytest.mark.slow
 def test_gossip_train_step_multi_pod():
     """3-axis mesh (pod, data, model): gossip consensus spans pod x data
     jointly — the multi-pod worker set — and batch accounting is global."""

@@ -142,7 +142,7 @@ def test_adaptive_budget_stationary_matches_lemma6():
             jax.random.fold_in(key, t), cfg.n, cfg.b_max)
         from repro.core.stragglers import amb_batch_sizes
         b = amb_batch_sizes(times, float(state["t_budget"]))
-        state = ctrl.update(state, b.sum())
+        state = ctrl.update(state, b)
     # Lemma 6's T for this model/batch
     t_lemma6 = amb_budget_from_fmb(model, cfg.n, 600)
     assert abs(float(state["t_budget"]) - t_lemma6) / t_lemma6 < 0.25

@@ -8,7 +8,9 @@ from hypothesis import given, settings, strategies as st
 from repro.kernels import ops, ref
 from repro.kernels.dual_update import dual_update_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
-from repro.kernels.gossip_combine import gossip_combine_pallas
+from repro.kernels.gossip_combine import (gossip_combine_pallas,
+                                          quantized_combine_pallas,
+                                          stochastic_quantize_pallas)
 from repro.kernels.rwkv6_scan import rwkv6_scan_pallas
 
 
@@ -48,6 +50,50 @@ def test_gossip_combine_sweep(k, n):
     got = gossip_combine_pallas(msgs, w, interpret=True, block_rows=16)
     want = ref.gossip_combine_ref(msgs, w)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# quantized-gossip kernels (send: stochastic quantize; receive: combine)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,d,bits", [(4, 300, 8), (3, 1024, 4), (8, 77, 8)])
+def test_stochastic_quantize_sweep(n, d, bits):
+    key = jax.random.PRNGKey(2)
+    m = jax.random.normal(key, (n, d)) * 2.0
+    h = jax.random.normal(jax.random.fold_in(key, 1), (n, d)) * 0.3
+    rnd = jax.random.uniform(jax.random.fold_in(key, 2), (n, d))
+    diff = m - h
+    lo = diff.min(-1, keepdims=True)
+    scale = jnp.maximum(diff.max(-1, keepdims=True) - lo, 1e-12) \
+        / (2 ** bits - 1)
+    lvl, hnew = stochastic_quantize_pallas(m, h, rnd, lo, scale,
+                                           interpret=True, block_rows=4)
+    lvl_r, hnew_r = ref.stochastic_quantize_ref(m, h, rnd, lo, scale)
+    np.testing.assert_array_equal(np.asarray(lvl), np.asarray(lvl_r))
+    np.testing.assert_allclose(np.asarray(hnew), np.asarray(hnew_r),
+                               rtol=1e-5, atol=1e-5)
+    assert int(lvl.max()) <= 2 ** bits - 1
+
+
+@pytest.mark.parametrize("n,d,km1", [(4, 300, 2), (6, 129, 4)])
+def test_quantized_combine_sweep(n, d, km1):
+    key = jax.random.PRNGKey(3)
+    m = jax.random.normal(key, (n, d))
+    hnbr = jax.random.normal(jax.random.fold_in(key, 1), (km1, n, d))
+    lvl = jax.random.randint(jax.random.fold_in(key, 2), (km1, n, d),
+                             0, 256).astype(jnp.uint8)
+    lo = jax.random.normal(jax.random.fold_in(key, 3), (km1, n, 1))
+    scale = jax.random.uniform(jax.random.fold_in(key, 4),
+                               (km1, n, 1)) * 0.01
+    w = jax.nn.softmax(jax.random.normal(jax.random.fold_in(key, 5),
+                                         (km1 + 1,)))
+    got_o, got_h = quantized_combine_pallas(m, hnbr, lvl, lo, scale, w,
+                                            interpret=True, block_rows=8)
+    want_o, want_h = ref.quantized_combine_ref(m, hnbr, lvl, lo, scale, w)
+    np.testing.assert_allclose(np.asarray(got_o), np.asarray(want_o),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(got_h), np.asarray(want_h),
                                rtol=1e-5, atol=1e-5)
 
 
