@@ -1,12 +1,15 @@
 # Repro convenience targets.  `make verify` is the tier-1 gate.
 
-.PHONY: verify verify-fast bench-dist
+.PHONY: verify verify-fast smoke bench-dist
 
-verify:
+verify:               # API smoke stage + full pytest suite
 	scripts/verify.sh
 
-verify-fast:          # skip the mesh-heavy subprocess tests
-	scripts/verify.sh -m 'not slow'
+verify-fast:          # fast lane: API smoke + pytest -m 'not slow'
+	scripts/verify.sh --fast
+
+smoke:                # just the programmatic-API smoke example
+	JAX_PLATFORMS=cpu PYTHONPATH=src python -m examples.api_session --smoke
 
 bench-dist:
 	PYTHONPATH=src python -m benchmarks.dist_step --steps 6

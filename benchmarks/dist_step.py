@@ -1,10 +1,12 @@
 """Benchmark the repro.dist train steps: exact-psum vs gossip consensus.
 
-Times, on a host-device mesh (forced device count, CPU-friendly smoke
-config):
+All steps are built through the Session API's
+:func:`repro.api.protocol.build_protocol` — the same uniform
+TrainState/epoch-driver surface the launchers use.  Times, on a
+host-device mesh (forced device count, CPU-friendly smoke config):
 
-  * exact-consensus ``make_train_step`` (dual averaging),
-  * ``make_gossip_train_step`` at several round counts r,
+  * the exact-consensus protocol step (dual averaging),
+  * the gossip protocol step at several round counts r,
   * the ``gossip_combine`` K-way weighted combine: Pallas kernel
     (interpret mode on CPU) vs the pure-jnp reference, at model-sized
     message widths,
@@ -43,12 +45,12 @@ from pathlib import Path  # noqa: E402
 import jax               # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 
+from repro.api.protocol import build_protocol               # noqa: E402
 from repro.configs import smoke_config                      # noqa: E402
 from repro.core.dual_averaging import BetaSchedule          # noqa: E402
 from repro.data import LMTokenStream, shard_batch           # noqa: E402
 from repro.dist import use_sharding                         # noqa: E402
-from repro.dist.amb import (AMBConfig, make_gossip_train_step,  # noqa: E402
-                            make_train_step, num_workers)
+from repro.dist.amb import AMBConfig, num_workers           # noqa: E402
 from repro.dist.params import tree_shardings                # noqa: E402
 from repro.kernels import ref                               # noqa: E402
 from repro.kernels.gossip_combine import gossip_combine_pallas  # noqa: E402
@@ -87,16 +89,17 @@ def bench_train_steps(arch: str, steps: int, seq_len: int) -> dict:
         batch = shard_batch(stream.batch(0, 0, 2 * n), mesh)
 
         opt = make_optimizer("dual_averaging", beta=beta)
-        step = jax.jit(make_train_step(cfg, opt, mesh, AMBConfig()))
-        st = opt.init(params)
-        t = _time_it(lambda: step(params, st, batch, b), iters=steps)
+        proto = build_protocol(cfg, mesh, AMBConfig(), optimizer=opt)
+        step = jax.jit(proto.step)
+        st = proto.init(params)
+        t = _time_it(lambda: step(st, batch, b), iters=steps)
         out["exact_step_s"] = t
 
         for r in (4, 16, 60):
             amb = AMBConfig(consensus="gossip", gossip_rounds=r, beta=beta)
-            init_state, gstep = make_gossip_train_step(cfg, mesh, amb)
-            gs = init_state(params)
-            gstep_j = jax.jit(gstep)
+            gproto = build_protocol(cfg, mesh, amb)
+            gs = gproto.init(params)
+            gstep_j = jax.jit(gproto.step)
             out[f"gossip_r{r}_step_s"] = _time_it(
                 lambda: gstep_j(gs, batch, b), iters=steps)
 
@@ -138,7 +141,6 @@ def bench_pipelined(arch: str, steps: int, seq_len: int,
     """
     from repro.dist.amb import (_local_grads, pack_messages,
                                 strategy_from_config, unpack_duals)
-    from repro.dist.pipeline import make_pipelined_gossip_train_step
 
     mesh = jax.make_mesh((4, 2), ("data", "model"))
     cfg = smoke_config(arch)
@@ -162,8 +164,8 @@ def bench_pipelined(arch: str, steps: int, seq_len: int,
         for r in rounds:
             amb = AMBConfig(consensus="gossip", gossip_rounds=r, beta=beta)
             strategy = strategy_from_config(amb, mesh)
-            init_s, gstep = make_gossip_train_step(cfg, mesh, amb)
-            gs = init_s(params)
+            gproto = build_protocol(cfg, mesh, amb)
+            gs = gproto.init(params)
 
             def compute_phase(state, batch, b):
                 beta_t = amb.beta(state["t"].astype(jnp.float32) + 1.0)
@@ -183,13 +185,12 @@ def bench_pipelined(arch: str, steps: int, seq_len: int,
                 return sp(gs, cp(gs, batch, b))
 
             t_split = _time_it(split_epoch, iters=steps)
-            gj = jax.jit(gstep)
+            gj = jax.jit(gproto.step)
             t_fused = _time_it(lambda: gj(gs, batch, b), iters=steps)
 
-            init_p, pstep, _ = make_pipelined_gossip_train_step(
-                cfg, mesh, amb)
-            pj = jax.jit(pstep)
-            ps, _ = pj(init_p(params), batch, b)   # warm: pending in flight
+            pproto = build_protocol(cfg, mesh, amb, pipeline=True)
+            pj = jax.jit(pproto.step)
+            ps, _ = pj(pproto.init(params), batch, b)  # warm: in flight
             t_pipe = _time_it(lambda: pj(ps, batch, b), iters=steps)
 
             out[f"r{r}"] = {
@@ -214,15 +215,17 @@ def multipod_probe(arch: str, seq_len: int) -> dict:
     appears once in HLO, so the parsed permute bytes *are* per-round),
     vs the exact-consensus all-reduce step.  The analytic per-worker wire
     bytes from ``ConsensusStrategy.wire_bytes_per_round`` are reported
-    alongside — on the host backend XLA hoists the uint8->f32 dequant
-    across the roll, so the HLO-parsed bytes understate the quantized
-    strategies' wire savings.
+    alongside, and ``permute_bytes_by_dtype`` breaks the permutes down by
+    element type — the quantized strategies' planes must show up as u8
+    (the optimization barriers in ``QuantizedGossipConsensus`` pin the
+    wire; the rounding draws are partitionable-threefry, i.e. shard-local,
+    so no u32 RNG resharding rides the interconnect either).
     """
     import numpy as np
     from jax.sharding import NamedSharding, PartitionSpec as P
     from repro.configs import InputShape
     from repro.core.dual_averaging import BetaSchedule as BS
-    from repro.dist.amb import make_train_step, strategy_from_config
+    from repro.dist.amb import strategy_from_config
     from repro.launch import specs as S
     from repro.launch.dryrun import _costs
     from repro.launch.mesh import make_production_mesh
@@ -236,14 +239,20 @@ def multipod_probe(arch: str, seq_len: int) -> dict:
     pspecs = tree_shardings(params_sds, mesh)
     as_in = lambda sds, sh: jax.ShapeDtypeStruct(sds.shape, sds.dtype,
                                                  sharding=sh)
-    params_in = jax.tree.map(as_in, params_sds, pspecs)
     zsh = NamedSharding(mesh, P(("pod", "data")))
-    state_in = {"z": jax.tree.map(
-                    lambda s: jax.ShapeDtypeStruct((n,) + s.shape,
-                                                   jnp.float32, sharding=zsh),
-                    params_sds),
-                "w0": params_in,
-                "t": jax.ShapeDtypeStruct((), jnp.int32)}
+
+    def protocol_state_in(proto, **spec_overrides):
+        """Abstract TrainState inputs: structure from the protocol's own
+        init (the single source of truth), shardings assigned per key."""
+        state_sds = jax.eval_shape(proto.init, params_sds)
+        specs = {"t": NamedSharding(mesh, P())}
+        for key, sub in state_sds.items():
+            if key == "t":
+                continue
+            specs[key] = spec_overrides.get(
+                key, jax.tree.map(lambda s: zsh, sub))
+        return jax.tree.map(as_in, state_sds, specs)
+
     shape = InputShape(name="probe", kind="train", global_batch=n,
                        seq_len=seq_len)
     batch_in = S.train_input_specs(cfg, shape, mesh)
@@ -258,17 +267,21 @@ def multipod_probe(arch: str, seq_len: int) -> dict:
         amb = AMBConfig(consensus=consensus, gossip_rounds=1, graph=graph,
                         beta=beta)
         with use_sharding(mesh):
-            _, gstep = make_gossip_train_step(cfg, mesh, amb)
+            gproto = build_protocol(cfg, mesh, amb)
+            state_in = protocol_state_in(gproto, w0=pspecs)
             t0 = _t.time()
-            lowered = jax.jit(gstep).lower(state_in, batch_in, b_in)
+            lowered = jax.jit(gproto.step).lower(state_in, batch_in, b_in)
             t1 = _t.time()
             c = _costs(lowered.compile())
             t2 = _t.time()
             strategy = strategy_from_config(amb, mesh)
+        permute = c["collectives"]["collective-permute"]
         out[f"{consensus}_{graph}"] = {
             "lower_s": round(t1 - t0, 2), "compile_s": round(t2 - t1, 2),
             "hlo_flops": c["flops"],
-            "permute_per_round": c["collectives"]["collective-permute"],
+            "permute_per_round": {"count": permute["count"],
+                                  "bytes": permute["bytes"]},
+            "permute_bytes_by_dtype": permute["by_dtype"],
             "all_reduce": c["collectives"]["all-reduce"],
             "wire_bytes_per_round_per_worker":
                 strategy.wire_bytes_per_round(d_msg),
@@ -276,11 +289,13 @@ def multipod_probe(arch: str, seq_len: int) -> dict:
 
     opt = DualAveragingOpt()
     with use_sharding(mesh):
-        step = make_train_step(cfg, opt, mesh, AMBConfig())
-        opt_sds = jax.eval_shape(opt.init, params_sds)
-        opt_in = jax.tree.map(as_in, opt_sds, tree_shardings(opt_sds, mesh))
+        proto = build_protocol(cfg, mesh, AMBConfig(), optimizer=opt)
+        opt_specs = tree_shardings(jax.eval_shape(opt.init, params_sds),
+                                   mesh)
+        exact_state_in = protocol_state_in(proto, params=pspecs,
+                                           opt=opt_specs)
         t0 = _t.time()
-        lowered = jax.jit(step).lower(params_in, opt_in, batch_in, b_in)
+        lowered = jax.jit(proto.step).lower(exact_state_in, batch_in, b_in)
         t1 = _t.time()
         c = _costs(lowered.compile())
         t2 = _t.time()

@@ -3,9 +3,35 @@
 # so the suite behaves identically with or without accelerators attached.
 # Mesh-heavy subprocess tests force their own device counts internally.
 #
-#   scripts/verify.sh              # full tier-1 run
-#   scripts/verify.sh -m 'not slow'  # skip the mesh-heavy subprocess tests
+#   scripts/verify.sh                # full tier-1 run (API smoke + pytest)
+#   scripts/verify.sh --fast         # fast lane: skip the mesh-heavy
+#                                    # subprocess tests (-m 'not slow')
+#   scripts/verify.sh -m 'not slow'  # extra pytest args pass through
+#   scripts/verify.sh --no-smoke ... # skip the API smoke stage
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export JAX_PLATFORMS=cpu
-PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} exec python -m pytest -x -q "$@"
+export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
+
+pytest_args=()
+smoke=1
+for arg in "$@"; do
+  case "$arg" in
+    --fast)     pytest_args+=(-m "not slow") ;;
+    --no-smoke) smoke=0 ;;
+    *)          pytest_args+=("$arg") ;;
+  esac
+done
+
+if [[ "$smoke" == 1 ]]; then
+  echo "== API smoke: python -m examples.api_session --smoke =="
+  # under JAX_PLATFORMS=cpu the example forces its own 8 host devices
+  # via XLA_FLAGS, so this behaves identically with or without
+  # accelerators attached
+  python -m examples.api_session --smoke
+fi
+
+echo "== pytest ${pytest_args[*]:-} =="
+# ${arr[@]+...} guard: empty-array expansion is an unbound-variable error
+# under `set -u` on bash < 4.4 (stock macOS bash 3.2)
+exec python -m pytest -x -q ${pytest_args[@]+"${pytest_args[@]}"}

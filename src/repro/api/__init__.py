@@ -1,0 +1,36 @@
+"""``repro.api`` — the public programmatic surface of the system.
+
+The paper's contract — a fixed compute time T producing variable
+per-worker minibatches b_i(t), followed by a fixed consensus window T_c —
+is configured by three frozen, JSON-round-trippable specs and driven by
+one session object:
+
+  * :class:`TrainSpec` / :class:`ClockSpec` / :class:`ConsensusSpec`
+    (:mod:`repro.api.specs`) — declarative configuration with argparse
+    and JSON adapters.
+  * :class:`Clock` with :class:`SimulatedClock` (paper evaluation) and
+    :class:`MeasuredClock` (hardware-tracking) implementations
+    (:mod:`repro.api.clock`) — yields ``(times, budget)`` per epoch.
+  * :class:`TrainProtocol` / :func:`build_protocol`
+    (:mod:`repro.api.protocol`) — the uniform TrainState + epoch driver
+    over the exact / gossip / quantized / pipelined modes.
+  * :class:`AMBSession` (:mod:`repro.api.session`) — mesh + params +
+    clock + protocol behind ``step`` / ``flush`` / ``save`` / ``params``,
+    with elastic worker membership via ``set_active``.
+
+``launch/train.py``, ``launch/serve.py``, ``launch/dryrun.py`` and
+``benchmarks/dist_step.py`` are thin adapters over this package; see
+``examples/api_session.py`` for programmatic use.
+"""
+from .clock import Clock, MeasuredClock, SimulatedClock, make_clock  # noqa: F401
+from .protocol import (ExactProtocol, GossipProtocol,                # noqa: F401
+                       PipelinedProtocol, TrainProtocol, build_protocol)
+from .session import AMBSession                                      # noqa: F401
+from .specs import ClockSpec, ConsensusSpec, TrainSpec               # noqa: F401
+
+__all__ = [
+    "AMBSession", "Clock", "ClockSpec", "ConsensusSpec", "ExactProtocol",
+    "GossipProtocol", "MeasuredClock", "PipelinedProtocol",
+    "SimulatedClock", "TrainProtocol", "TrainSpec", "build_protocol",
+    "make_clock",
+]

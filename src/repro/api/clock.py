@@ -1,0 +1,132 @@
+"""The epoch clock behind the paper's fixed-compute-time contract.
+
+A :class:`Clock` answers one question per epoch: *given this epoch's PRNG
+key, what are the per-gradient times and the compute deadline T?*  From
+``(times, budget)`` the session derives the paper's variable minibatch
+``b_i(t)`` (:func:`repro.core.stragglers.amb_batch_sizes`) — the entire
+straggler-exploitation mechanism reduces to this one interface.
+
+  * :class:`SimulatedClock` — the paper-evaluation clock: times come
+    straight from a :class:`repro.core.stragglers.StragglerModel`, and T
+    is either explicit or the Lemma-6 ``(1 + n/b) mu``.
+  * :class:`MeasuredClock` — the mesh-path default (moved here from
+    ``launch/train.py``): the straggler model supplies only the *relative*
+    cross-worker heterogeneity, while the absolute seconds-per-gradient
+    unit is an EMA of the real measured step time, so b_i(t) tracks the
+    actual hardware rate.
+
+Both honour an explicit ``compute_time`` — including ``0.0`` — via
+``is None`` checks (:meth:`repro.api.specs.ClockSpec.resolve_budget`);
+the budget is never re-derived when the user pinned it.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+
+from ..core.stragglers import StragglerModel
+from .specs import ClockSpec
+
+Array = jax.Array
+
+
+class Clock:
+    """Per-epoch ``(times, budget)`` source.
+
+    ``epoch(key)`` returns the ``(n, b_max)`` per-gradient times and the
+    compute budget T for one epoch.  ``update`` feeds back the measured
+    wall time of the step that consumed them (a no-op for simulated
+    clocks).
+    """
+
+    def epoch(self, key: Array) -> Tuple[Array, float]:
+        raise NotImplementedError
+
+    def update(self, step_seconds: float, global_b: float) -> None:
+        pass
+
+
+class SimulatedClock(Clock):
+    """Paper-evaluation clock: model times, Lemma-6 (or explicit) T."""
+
+    def __init__(self, model: StragglerModel, n: int,
+                 batch_per_worker: int,
+                 compute_time: Optional[float] = None):
+        self.model = model
+        self.n = n
+        self.bpw = batch_per_worker
+        gb = n * batch_per_worker
+        # Lemma 6: T = (1 + n/b) mu (simulated-clock units); an explicit
+        # compute_time — 0.0 included — wins (tri-state, not truthiness).
+        derived = (1.0 + n / gb) * model.mean_batch_time()
+        self.budget_t = derived if compute_time is None else compute_time
+
+    def epoch(self, key: Array) -> Tuple[Array, float]:
+        return self.model.per_gradient_times(key, self.n, self.bpw), \
+            self.budget_t
+
+
+class MeasuredClock(Clock):
+    """b_i(t) from real per-step wall-clock timings (mesh path default).
+
+    The simulated straggler model keeps one job — supplying the *relative*
+    per-worker heterogeneity (its per-gradient draws divided by its own
+    mean) — while the absolute seconds-per-gradient unit is an EMA of the
+    measured step time divided by the gradients that step consumed.  The
+    Lemma-6 budget ``T = (1 + n/b) mu`` is re-derived from the measured
+    unit each epoch, so the deadline tracks the actual hardware rate
+    (compile-time warmup, cache effects, CPU contention) instead of the
+    model's constants.  An explicit ``compute_time`` (0.0 included) pins
+    the budget and disables the re-derivation.
+    """
+
+    def __init__(self, model: StragglerModel, n: int,
+                 batch_per_worker: int, ema: float = 0.7,
+                 compute_time: Optional[float] = None):
+        self.model = model
+        self.n = n
+        self.bpw = batch_per_worker
+        self.ema = ema
+        self.compute_time = compute_time
+        # model-relative unit: mean seconds per gradient in model time
+        self.model_unit = model.mean_batch_time() / model.b_ref
+        self.sec_per_grad = None      # measured EMA; None until first step
+
+    def _unit(self) -> float:
+        return self.sec_per_grad if self.sec_per_grad is not None \
+            else self.model_unit      # pre-measurement boot
+
+    def update(self, step_seconds: float, global_b: float) -> None:
+        obs = step_seconds / max(global_b, 1.0)
+        self.sec_per_grad = (obs if self.sec_per_grad is None else
+                             self.ema * self.sec_per_grad
+                             + (1.0 - self.ema) * obs)
+
+    def times(self, key: Array) -> Array:
+        """(n, b_max) per-gradient times in *measured* seconds."""
+        rel = self.model.per_gradient_times(key, self.n, self.bpw) \
+            / self.model_unit                       # mean-1 heterogeneity
+        return rel * self._unit()
+
+    def budget(self) -> float:
+        """Lemma-6 T in measured seconds: (1 + n/b) * mu_measured."""
+        gb = self.n * self.bpw
+        return (1.0 + self.n / gb) * self._unit() * self.bpw
+
+    def epoch(self, key: Array) -> Tuple[Array, float]:
+        budget = self.budget() if self.compute_time is None \
+            else self.compute_time
+        return self.times(key), budget
+
+
+def make_clock(spec: ClockSpec, n: int, batch_per_worker: int) -> Clock:
+    """The configured :class:`Clock` for ``n`` workers."""
+    model = spec.make_model(batch_per_worker)
+    if spec.kind == "simulated":
+        return SimulatedClock(model, n, batch_per_worker,
+                              compute_time=spec.compute_time)
+    if spec.kind == "measured":
+        return MeasuredClock(model, n, batch_per_worker, ema=spec.ema,
+                             compute_time=spec.compute_time)
+    raise ValueError(f"unknown clock kind {spec.kind!r}")

@@ -1,0 +1,153 @@
+"""One ``TrainProtocol`` surface over the exact / gossip / pipelined steps.
+
+The related protocol family (AMB, Anytime SGD, AMB-with-delayed-gradients)
+diverges only at the *epoch driver*: how a state advances by one epoch and
+how the consensus phase is scheduled against the compute phase.  This
+module isolates exactly that layer.  A :class:`TrainProtocol` exposes four
+methods over a uniform ``TrainState``:
+
+    ``init(params) -> state``            build the mode's TrainState
+    ``step(state, batch, b) -> (state, metrics)``   one AMB epoch
+    ``flush(state) -> state``            settle in-flight consensus
+    ``primal(state) -> params``          the current primal iterate
+
+The uniform **TrainState** is a pytree dict that always carries the epoch
+counter ``"t"``; the mode-specific leaves are documented per protocol:
+
+  * :class:`ExactProtocol` — ``{"params", "opt", "t"}``: the eps = 0 /
+    master-worker limit (:func:`repro.dist.amb.make_train_step`), driven
+    by any :class:`repro.optim.Optimizer`.
+  * :class:`GossipProtocol` — ``{"z", "w0", "t"}``: per-worker dual
+    replicas under any :class:`repro.dist.consensus.ConsensusStrategy`
+    (:func:`repro.dist.amb.make_gossip_train_step`).
+  * :class:`PipelinedProtocol` — ``{"z", "w0", "t", "pending"}``: the
+    staleness-1 pipelined epoch
+    (:func:`repro.dist.pipeline.make_pipelined_gossip_train_step`);
+    ``flush`` settles the final in-flight message.
+
+:func:`build_protocol` replaces the drivers' former three-way
+``if gossip / if pipeline`` branching; launch, serve, dry-run, and the
+benchmarks all construct their step through it (directly or via
+:class:`repro.api.AMBSession`).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax.numpy as jnp
+
+from ..dist.amb import (AMBConfig, gossip_primal, make_gossip_train_step,
+                        make_train_step)
+from ..dist.pipeline import make_pipelined_gossip_train_step
+
+TrainState = dict      # pytree; always carries "t", see module docstring
+
+
+class TrainProtocol:
+    """Uniform epoch-driver interface (see module docstring)."""
+
+    mode: str = "base"
+
+    def init(self, params) -> TrainState:
+        raise NotImplementedError
+
+    def step(self, state: TrainState, batch, b) -> tuple:
+        raise NotImplementedError
+
+    def flush(self, state: TrainState) -> TrainState:
+        """Settle any in-flight consensus; identity for unpipelined modes."""
+        return state
+
+    def primal(self, state: TrainState) -> Any:
+        raise NotImplementedError
+
+
+class ExactProtocol(TrainProtocol):
+    """eps = 0 exact consensus, any optimizer.  State: params/opt/t."""
+
+    mode = "exact"
+
+    def __init__(self, cfg, mesh, amb: AMBConfig, optimizer):
+        self.optimizer = optimizer
+        self._step = make_train_step(cfg, optimizer, mesh, amb)
+
+    def init(self, params) -> TrainState:
+        return {"params": params, "opt": self.optimizer.init(params),
+                "t": jnp.zeros((), jnp.int32)}
+
+    def step(self, state, batch, b):
+        params, opt, metrics = self._step(state["params"], state["opt"],
+                                          batch, b)
+        return {"params": params, "opt": opt, "t": state["t"] + 1}, metrics
+
+    def primal(self, state):
+        return state["params"]
+
+
+class GossipProtocol(TrainProtocol):
+    """Decentralized consensus, per-worker dual replicas.  State: z/w0/t."""
+
+    mode = "gossip"
+
+    def __init__(self, cfg, mesh, amb: AMBConfig):
+        self.amb = amb
+        self._init, self._step = make_gossip_train_step(cfg, mesh, amb)
+
+    def init(self, params) -> TrainState:
+        return self._init(params)
+
+    def step(self, state, batch, b):
+        return self._step(state, batch, b)
+
+    def primal(self, state):
+        return gossip_primal(state, self.amb)
+
+
+class PipelinedProtocol(TrainProtocol):
+    """Staleness-1 pipelined epochs.  State: z/w0/t/pending."""
+
+    mode = "pipelined"
+
+    def __init__(self, cfg, mesh, amb: AMBConfig):
+        self.amb = amb
+        self._init, self._step, self._flush = \
+            make_pipelined_gossip_train_step(cfg, mesh, amb)
+
+    def init(self, params) -> TrainState:
+        return self._init(params)
+
+    def step(self, state, batch, b):
+        return self._step(state, batch, b)
+
+    def flush(self, state):
+        return self._flush(state)
+
+    def primal(self, state):
+        return gossip_primal(state, self.amb)
+
+
+def build_protocol(cfg, mesh, amb: AMBConfig, *, optimizer=None,
+                   pipeline: bool = False) -> TrainProtocol:
+    """The right :class:`TrainProtocol` for (consensus, pipeline, optimizer).
+
+    ``pipeline=True`` or a non-exact consensus selects the decentralized
+    dual-averaging family (per-worker replicas); exact consensus without
+    pipelining runs the single-program weighted step under ``optimizer``.
+    Elastic membership rides on ``amb.active`` (a worker bool mask): the
+    gossip operator is rebuilt on the induced active subgraph — the hook
+    behind :meth:`repro.api.AMBSession.set_active`.
+    """
+    from ..optim import DualAveragingOpt
+    decentralized = pipeline or amb.consensus != "exact"
+    if decentralized and optimizer is not None and \
+            not isinstance(optimizer, DualAveragingOpt):
+        raise ValueError("gossip / pipelined modes run the paper's "
+                         "dual-averaging protocol; use the dual_averaging "
+                         "optimizer")
+    if pipeline:
+        return PipelinedProtocol(cfg, mesh, amb)
+    if amb.consensus != "exact":
+        return GossipProtocol(cfg, mesh, amb)
+    if optimizer is None:
+        optimizer = DualAveragingOpt(beta=amb.beta, radius=amb.radius)
+    return ExactProtocol(cfg, mesh, amb, optimizer)

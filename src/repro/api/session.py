@@ -1,0 +1,253 @@
+"""``AMBSession`` — the one programmatic surface over train / serve / bench.
+
+A session owns everything the drivers used to hand-wire: mesh setup, param
+init + sharding, clock construction, consensus-strategy and epoch-driver
+selection (via :func:`repro.api.protocol.build_protocol`), and the uniform
+``TrainState``.  The same four calls work identically across the exact,
+gossip, quantized-gossip, and pipelined modes:
+
+    session = AMBSession(TrainSpec(arch="qwen2-1.5b", smoke=True, data=4,
+                                   model=2),
+                         ClockSpec(kind="simulated"),
+                         ConsensusSpec(consensus="gossip", graph="torus"))
+    for step in range(steps):
+        metrics = session.step(stream.batch(0, step, session.global_batch))
+    session.flush()                       # settle in-flight consensus
+    session.save("ckpt/")                 # primal checkpoint, any mode
+    w = session.params                    # current primal iterate
+
+Elastic worker membership is first-class: ``session.set_active(mask)``
+exploits AMB's existing b_i(t) = 0 tolerance — a masked worker's
+minibatch is forced to zero (so its sequence weights vanish from the
+eq.-6 average) and the gossip taps are rebuilt on the induced active
+subgraph (:func:`repro.dist.consensus.masked_metropolis`) so remaining
+workers re-weight their surviving neighbors.  The TrainState carries
+over untouched across membership changes: a rejoining worker resumes
+from its (stale) dual replica and consensus re-mixes it in.
+"""
+from __future__ import annotations
+
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..ckpt import save_checkpoint
+from ..configs import get_config, smoke_config
+from ..core.stragglers import amb_batch_sizes, fmb_finish_times
+from ..data import shard_batch
+from ..dist import use_sharding
+from ..dist.amb import num_workers
+from ..dist.params import tree_shardings
+from ..launch.mesh import make_host_mesh
+from ..models import init_params
+from ..optim import make_optimizer
+from .clock import make_clock
+from .protocol import build_protocol
+from .specs import ClockSpec, ConsensusSpec, TrainSpec
+
+Array = jax.Array
+
+
+class AMBSession:
+    """One AMB training/serving session over a device mesh.
+
+    Args:
+      train: architecture / mesh / optimizer spec.
+      clock: fixed-time contract spec (measured or simulated b_i(t)).
+      consensus: consensus strategy + epoch driver spec.
+      mesh: an existing mesh to run on; default builds a host mesh from
+        ``train``'s (pod, data, model) extents.
+      params: pre-initialized (e.g. restored) parameters; default
+        initializes from ``train.seed`` and shards per the layout rules.
+      cfg: an explicit :class:`repro.models.common.ArchConfig`, for
+        custom architectures outside the registry (tests, research).
+
+    A zero-step session is a well-defined no-op: construction alone
+    yields valid ``params`` (the initialization), ``flush`` and ``save``
+    work, and no loss is ever fabricated.
+    """
+
+    def __init__(self, train: TrainSpec,
+                 clock: Optional[ClockSpec] = None,
+                 consensus: Optional[ConsensusSpec] = None, *,
+                 mesh=None, params=None, cfg=None):
+        self.train = train
+        self.clock_spec = clock if clock is not None else ClockSpec()
+        self.consensus_spec = consensus if consensus is not None \
+            else ConsensusSpec()
+        self.cfg = cfg if cfg is not None else (
+            smoke_config(train.arch) if train.smoke
+            else get_config(train.arch))
+        self.mesh = mesh if mesh is not None else make_host_mesh(
+            train.data, train.model, pod=train.pod)
+        self.n_workers = num_workers(self.mesh)
+        self.global_batch = self.n_workers * train.batch_per_worker
+        self._batch_axes = tuple(a for a in ("pod", "data")
+                                 if a in self.mesh.axis_names)
+
+        self.clock = make_clock(self.clock_spec, self.n_workers,
+                                train.batch_per_worker)
+        self._optimizer = None
+        if not (self.consensus_spec.pipeline
+                or self.consensus_spec.consensus != "exact"):
+            if train.optimizer == "dual_averaging":
+                self._optimizer = make_optimizer(
+                    "dual_averaging",
+                    beta=self.consensus_spec.beta(self.global_batch))
+            else:
+                self._optimizer = make_optimizer(train.optimizer)
+        elif train.optimizer != "dual_averaging":
+            raise ValueError("gossip / pipelined modes run the paper's "
+                             "dual-averaging protocol; use "
+                             "optimizer='dual_averaging'")
+
+        self._key = jax.random.PRNGKey(train.seed)
+        self._active: Optional[tuple] = None
+        self._protocols: dict = {}       # active mask -> built protocol
+        self._build_protocol()
+
+        with use_sharding(self.mesh):
+            if params is None:
+                params = init_params(self._key, self.cfg)
+                params = jax.tree.map(
+                    lambda p, sh: jax.device_put(p, sh), params,
+                    tree_shardings(params, self.mesh))
+            self.state = self.protocol.init(params)
+        self.steps_done = 0
+        self.sim_wall = 0.0
+
+    # -- construction ------------------------------------------------------
+
+    def _build_protocol(self, active: Optional[tuple] = None) -> None:
+        """(Re)build the epoch driver; called at init and on set_active.
+
+        Exact consensus ignores ``active`` at the step level (a masked
+        worker's b_i = 0 already zeroes it out of the eq.-6 average), so
+        only the gossip-family protocols rebuild — and rebuilds are cached
+        by mask, so a worker rejoining a previously-seen configuration
+        reuses the warm jitted executable instead of recompiling.
+        """
+        decentralized = (self.consensus_spec.pipeline
+                         or self.consensus_spec.consensus != "exact")
+        key = active if decentralized else None
+        if key not in self._protocols:
+            amb = self.consensus_spec.to_amb_config(
+                self.global_batch, self.train.seed, active=key)
+            proto = build_protocol(self.cfg, self.mesh, amb,
+                                   optimizer=self._optimizer,
+                                   pipeline=self.consensus_spec.pipeline)
+            self._protocols[key] = (proto, jax.jit(proto.step),
+                                    jax.jit(proto.flush))
+        self.protocol, self._step_fn, self._flush_fn = self._protocols[key]
+
+    # -- elastic membership ------------------------------------------------
+
+    @property
+    def active(self) -> np.ndarray:
+        """Bool (n_workers,) membership mask (all True when fully manned)."""
+        if self._active is None:
+            return np.ones(self.n_workers, dtype=bool)
+        return np.asarray(self._active, dtype=bool)
+
+    def set_active(self, mask) -> None:
+        """Elastic worker join/leave: re-mask b_i(t), rebuild gossip taps.
+
+        ``mask`` is a length-``n_workers`` boolean sequence.  A False
+        worker contributes b_i(t) = 0 every epoch (its sequence weights
+        vanish — the paper's straggler-wipeout case, which AMB already
+        tolerates) and is cut out of the gossip graph; the surviving
+        workers' Metropolis weights are re-derived on the induced
+        subgraph.  The TrainState (params / dual replicas) is preserved,
+        so a later ``set_active`` that re-admits the worker resumes it
+        from its stale dual and lets consensus pull it back in.
+        """
+        mask = np.asarray(mask, dtype=bool).reshape(-1)
+        if mask.shape[0] != self.n_workers:
+            raise ValueError(f"mask has {mask.shape[0]} entries for "
+                             f"{self.n_workers} workers")
+        if not mask.any():
+            raise ValueError("at least one worker must stay active")
+        active = None if mask.all() else tuple(bool(m) for m in mask)
+        # build first, commit second: a rejected mask (e.g. one that
+        # disconnects the gossip graph) must leave the session unchanged
+        self._build_protocol(active)
+        self._active = active
+
+    # -- the epoch ---------------------------------------------------------
+
+    def epoch_sizes(self, times: Array, budget: float) -> Array:
+        """b_i(t) for one epoch: deadline cut + membership mask."""
+        if self.train.mode == "amb":
+            b = amb_batch_sizes(times, budget)
+        else:
+            b = jnp.full((self.n_workers,), self.train.batch_per_worker,
+                         jnp.int32)
+        if self._active is not None:
+            b = jnp.where(jnp.asarray(self.active), b, 0)
+        return b
+
+    def step(self, batch, b: Optional[Array] = None) -> dict:
+        """Run one AMB epoch on a (host) global batch; returns metrics.
+
+        ``batch`` is the unsharded global batch (leading dim
+        ``global_batch``); the session shards it over the worker axes.
+        ``b`` overrides the clock-derived per-worker minibatch sizes
+        (sized ``(n_workers,)``); by default the clock draws this epoch's
+        per-gradient times and the deadline T decides b_i(t).
+        """
+        with use_sharding(self.mesh):
+            skey = jax.random.fold_in(self._key, 10_000 + self.steps_done)
+            times, budget = self.clock.epoch(skey)
+            if b is None:
+                b = self.epoch_sizes(times, budget)
+            # simulated wall clock: pipelined epochs hide T_c under the
+            # next epoch's compute; FMB waits for the slowest worker
+            if self.train.mode == "amb":
+                self.sim_wall += (
+                    max(float(budget), self.clock_spec.comm_time)
+                    if self.consensus_spec.pipeline
+                    else float(budget) + self.clock_spec.comm_time)
+            else:
+                self.sim_wall += float(jnp.max(fmb_finish_times(
+                    times, self.train.batch_per_worker))) \
+                    + self.clock_spec.comm_time
+            batch = shard_batch(batch, self.mesh, self._batch_axes)
+            t0 = time.time()
+            self.state, m = self._step_fn(self.state, batch, b)
+            loss = float(m["loss"])
+            step_s = time.time() - t0
+            self.clock.update(step_s, float(m["global_batch"]))
+            self.steps_done += 1
+            return {"loss": loss,
+                    "global_batch": float(m["global_batch"]),
+                    "budget_s": float(budget),
+                    "step_s": step_s,
+                    "sim_wall_s": self.sim_wall,
+                    "b": np.asarray(b)}
+
+    def flush(self) -> None:
+        """Settle in-flight consensus (pipelined mode); no-op otherwise."""
+        with use_sharding(self.mesh):
+            self.state = self._flush_fn(self.state)
+
+    # -- the iterate -------------------------------------------------------
+
+    @property
+    def params(self):
+        """The current primal iterate, identical across modes.
+
+        Exact mode: the optimizer's parameters.  Gossip modes: the
+        node-averaged prox of the dual replicas
+        (:func:`repro.dist.amb.gossip_primal`).  Pipelined sessions
+        should ``flush()`` first so the last enqueued message is folded
+        in.
+        """
+        with use_sharding(self.mesh):
+            return self.protocol.primal(self.state)
+
+    def save(self, directory) -> None:
+        """Checkpoint the primal at the current step count (any mode)."""
+        save_checkpoint(directory, self.steps_done, self.params)

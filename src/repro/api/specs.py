@@ -1,0 +1,229 @@
+"""Frozen, JSON-round-trippable configuration for the Session API.
+
+Three orthogonal specs describe an AMB deployment, subsuming the drivers'
+former argparse flags and the ad-hoc ``AMBConfig`` plumbing:
+
+  * :class:`TrainSpec` — *what* trains and *where*: architecture, mesh
+    extents (pod x data x model), optimizer, AMB-vs-FMB mode, seed.
+  * :class:`ClockSpec` — the paper's fixed-compute-time contract: the
+    straggler model, the budget T (explicit, or Lemma 6 when ``None`` —
+    an explicit ``compute_time=0.0`` is honoured, never treated as unset),
+    the consensus window T_c, and measured-vs-simulated timing.
+  * :class:`ConsensusSpec` — *how* workers agree: strategy name, gossip
+    graph/rounds, pipelining, and the dual-averaging beta schedule.
+
+Every spec round-trips through JSON (``to_json`` / ``from_json``) and
+through argparse (``add_cli_args`` / ``from_args``), so a CLI invocation,
+a JSON job file, and a programmatic :class:`repro.api.AMBSession` all
+construct the identical configuration.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+from typing import Optional, Tuple
+
+from ..core.dual_averaging import BetaSchedule
+from ..core.stragglers import (Deterministic, ShiftedExponential,
+                               StragglerModel)
+
+OPTIMIZERS = ("dual_averaging", "adamw", "sgd")
+MODES = ("amb", "fmb")
+CLOCK_KINDS = ("measured", "simulated")
+STRAGGLER_MODELS = ("shifted_exp", "deterministic")
+GRAPHS = ("ring", "torus")
+
+
+class _Spec:
+    """Shared JSON round-trip for the frozen spec dataclasses."""
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    def to_json(self) -> str:
+        return json.dumps(self.to_dict(), sort_keys=True)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "_Spec":
+        kw = dict(d)
+        for f in dataclasses.fields(cls):
+            # JSON has no tuples; restore them (torus_shape, active masks)
+            if f.name in kw and isinstance(kw[f.name], list):
+                kw[f.name] = tuple(kw[f.name])
+        return cls(**kw)
+
+    @classmethod
+    def from_json(cls, s: str) -> "_Spec":
+        return cls.from_dict(json.loads(s))
+
+    def replace(self, **kw):
+        return dataclasses.replace(self, **kw)
+
+
+# ---------------------------------------------------------------------------
+# TrainSpec
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TrainSpec(_Spec):
+    """Architecture, mesh, optimizer — the *what/where* of a session."""
+
+    arch: str = "qwen2-1.5b"
+    smoke: bool = False               # reduced (CPU-friendly) config variant
+    seq_len: int = 256
+    batch_per_worker: int = 8         # b/n: target per-worker minibatch
+    data: int = 1                     # mesh extents; workers = pod * data
+    model: int = 1
+    pod: int = 1
+    optimizer: str = "dual_averaging"
+    mode: str = "amb"                 # amb | fmb
+    seed: int = 0
+
+    @staticmethod
+    def add_cli_args(ap: argparse.ArgumentParser) -> None:
+        ap.add_argument("--arch", default=TrainSpec.arch)
+        ap.add_argument("--smoke", action="store_true",
+                        help="use the reduced config (CPU-friendly)")
+        ap.add_argument("--seq-len", type=int, default=TrainSpec.seq_len)
+        ap.add_argument("--batch-per-worker", type=int,
+                        default=TrainSpec.batch_per_worker)
+        ap.add_argument("--data", type=int, default=TrainSpec.data)
+        ap.add_argument("--model", type=int, default=TrainSpec.model)
+        ap.add_argument("--pod", type=int, default=TrainSpec.pod)
+        ap.add_argument("--optimizer", default=TrainSpec.optimizer,
+                        choices=list(OPTIMIZERS))
+        ap.add_argument("--mode", default=TrainSpec.mode,
+                        choices=list(MODES))
+        ap.add_argument("--seed", type=int, default=TrainSpec.seed)
+
+    @classmethod
+    def from_args(cls, args: argparse.Namespace) -> "TrainSpec":
+        return cls(arch=args.arch, smoke=args.smoke, seq_len=args.seq_len,
+                   batch_per_worker=args.batch_per_worker, data=args.data,
+                   model=args.model, pod=args.pod, optimizer=args.optimizer,
+                   mode=args.mode, seed=args.seed)
+
+
+# ---------------------------------------------------------------------------
+# ClockSpec
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ClockSpec(_Spec):
+    """The fixed-time contract: straggler model, budget T, window T_c.
+
+    ``compute_time`` is *tri-state*: ``None`` derives the Lemma-6 budget
+    ``T = (1 + n/b) mu`` (from the model's mean, or from the measured
+    per-gradient EMA under ``kind="measured"``); any float — including an
+    explicit ``0.0`` — is the budget verbatim.  The old drivers' ``x or
+    default`` idiom silently discarded ``--compute-time 0.0``; every
+    consumer of this spec must use ``is None`` checks (see
+    :meth:`resolve_budget`).
+    """
+
+    kind: str = "measured"            # measured | simulated
+    compute_time: Optional[float] = None   # explicit T; None = Lemma 6
+    comm_time: float = 0.5            # consensus window T_c (sim seconds)
+    straggler: str = "shifted_exp"    # shifted_exp | deterministic
+    lam: float = 2.0 / 3.0            # ShiftedExponential rate (paper I.2)
+    zeta: float = 1.0                 # ShiftedExponential shift
+    grad_time: float = 1.0            # Deterministic per-gradient time
+    ema: float = 0.7                  # measured-clock EMA smoothing
+
+    def make_model(self, b_ref: int) -> StragglerModel:
+        """The configured straggler model at reference batch ``b_ref``."""
+        if self.straggler == "shifted_exp":
+            return ShiftedExponential(lam=self.lam, zeta=self.zeta,
+                                      b_ref=b_ref)
+        if self.straggler == "deterministic":
+            return Deterministic(grad_time=self.grad_time, b_ref=b_ref)
+        raise ValueError(f"unknown straggler model {self.straggler!r}; "
+                         f"choose from {STRAGGLER_MODELS}")
+
+    def resolve_budget(self, derived: float) -> float:
+        """Explicit T when set (0.0 included), else the derived budget."""
+        return derived if self.compute_time is None else self.compute_time
+
+    @staticmethod
+    def add_cli_args(ap: argparse.ArgumentParser) -> None:
+        ap.add_argument("--clock", default=ClockSpec.kind,
+                        choices=list(CLOCK_KINDS),
+                        help="b_i(t) source: measured per-step wall time "
+                             "(mesh default) or the simulated straggler "
+                             "clock (paper evaluation)")
+        ap.add_argument("--sim-clock", action="store_true",
+                        help="alias for --clock simulated")
+        ap.add_argument("--compute-time", type=float, default=None,
+                        help="AMB budget T; default from Lemma 6 "
+                             "(an explicit 0.0 is honoured)")
+        ap.add_argument("--comm-time", type=float,
+                        default=ClockSpec.comm_time)
+        ap.add_argument("--straggler", default=ClockSpec.straggler,
+                        choices=list(STRAGGLER_MODELS))
+
+    @classmethod
+    def from_args(cls, args: argparse.Namespace) -> "ClockSpec":
+        kind = "simulated" if getattr(args, "sim_clock", False) \
+            else args.clock
+        return cls(kind=kind, compute_time=args.compute_time,
+                   comm_time=args.comm_time, straggler=args.straggler)
+
+
+# ---------------------------------------------------------------------------
+# ConsensusSpec
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ConsensusSpec(_Spec):
+    """Consensus strategy + epoch driver (sequential vs pipelined)."""
+
+    consensus: str = "exact"          # exact | gossip | gossip_q8 | gossip_q4
+    graph: str = "ring"               # worker gossip graph
+    gossip_rounds: int = 5            # r (fp32-equivalent budget)
+    torus_shape: Optional[Tuple[int, int]] = None  # default: mesh extents
+    lazy: float = 0.5                 # lazy-Metropolis mixing (PSD P)
+    pipeline: bool = False            # staleness-1 pipelined epochs
+    radius: Optional[float] = None    # prox trust-region (paper eq. 7)
+    beta_k: float = 50.0              # BetaSchedule knobs; beta_mu=None
+    beta_mu: Optional[float] = None   # defaults to the global batch b
+    beta_scale: float = 200.0
+
+    def beta(self, global_batch: int) -> BetaSchedule:
+        mu = float(global_batch) if self.beta_mu is None else self.beta_mu
+        return BetaSchedule(k=self.beta_k, mu=mu, scale=self.beta_scale)
+
+    def to_amb_config(self, global_batch: int, seed: int = 0,
+                      active: Optional[tuple] = None):
+        """The dist-layer :class:`repro.dist.amb.AMBConfig` equivalent."""
+        from ..dist.amb import AMBConfig
+        return AMBConfig(consensus=self.consensus,
+                         gossip_rounds=self.gossip_rounds, graph=self.graph,
+                         torus_shape=self.torus_shape, lazy=self.lazy,
+                         beta=self.beta(global_batch), radius=self.radius,
+                         seed=seed, active=active)
+
+    @staticmethod
+    def add_cli_args(ap: argparse.ArgumentParser) -> None:
+        from ..dist.consensus import CONSENSUS_CHOICES
+        ap.add_argument("--consensus", default=ConsensusSpec.consensus,
+                        choices=list(CONSENSUS_CHOICES),
+                        help="exact weighted all-reduce, decentralized "
+                             "gossip with per-worker dual replicas, or "
+                             "8/4-bit quantized gossip (more rounds per "
+                             "T_c)")
+        ap.add_argument("--graph", default=ConsensusSpec.graph,
+                        choices=list(GRAPHS),
+                        help="worker gossip graph; torus follows the "
+                             "physical (pod, data) mesh extents")
+        ap.add_argument("--gossip-rounds", type=int,
+                        default=ConsensusSpec.gossip_rounds)
+        ap.add_argument("--pipeline", action="store_true",
+                        help="staleness-1 pipelined epochs: overlap each "
+                             "step's gossip with the next forward/backward")
+
+    @classmethod
+    def from_args(cls, args: argparse.Namespace) -> "ConsensusSpec":
+        return cls(consensus=args.consensus, graph=args.graph,
+                   gossip_rounds=args.gossip_rounds,
+                   pipeline=args.pipeline)

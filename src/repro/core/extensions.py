@@ -162,7 +162,13 @@ def quantize_unbiased(x: Array, bits: int, key: Array) -> Array:
     u = (x - lo) / scale
     fl = jnp.floor(u)
     prob = u - fl
-    rnd = (jax.random.uniform(key, x.shape) < prob).astype(x.dtype)
+    # partitionable threefry: each shard of a worker-sharded x draws its
+    # own bits locally; the default (sequential) impl reshards ~4 bytes of
+    # u32 per element across the mesh — more interconnect traffic than the
+    # quantized wire planes it randomizes (see BENCH_dist multipod).
+    with jax.threefry_partitionable(True):
+        draws = jax.random.uniform(key, x.shape)
+    rnd = (draws < prob).astype(x.dtype)
     # Clamp: f32 rounding can put the row max a hair above `levels`, and
     # the stochastic up-round would then emit level 2^bits — which wraps
     # to 0 in a uint8 wire format (and overshoots hi here).

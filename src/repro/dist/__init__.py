@@ -1,6 +1,17 @@
 """Distributed AMB on real device meshes — the production substrate.
 
-Layered public API (bottom up):
+**Programmatic use goes through** :mod:`repro.api`: construct an
+:class:`repro.api.AMBSession` from :class:`repro.api.TrainSpec` /
+:class:`repro.api.ClockSpec` / :class:`repro.api.ConsensusSpec` and drive
+it with ``step`` / ``flush`` / ``save`` / ``params`` / ``set_active``
+(see ``examples/api_session.py``).  The session owns mesh setup, param
+sharding, clock construction, and epoch-driver selection; every launcher
+(``repro.launch.train``, ``repro.launch.serve``, ``repro.launch.dryrun``)
+and benchmark is a thin adapter over it.  This package is the substrate
+the session builds on — reach for it directly only when composing new
+protocols.
+
+Layered modules (bottom up):
 
   * :mod:`repro.dist.sharding` — ``use_sharding(mesh)`` context +
     ``constrain`` logical-axis activation annotations (no-op off-mesh).
@@ -11,8 +22,10 @@ Layered public API (bottom up):
     ``GossipConsensus`` (tap-decomposed ring/torus Metropolis gossip,
     Pallas-fused combine, dense fallback for arbitrary graphs), and
     ``QuantizedGossipConsensus`` (CHOCO-style 8/4-bit delta compression,
-    fused stochastic-quantize + combine kernels); ``make_strategy`` is
-    the factory.
+    fused stochastic-quantize + combine kernels, barrier-pinned uint8
+    wire planes); ``make_strategy`` is the factory, and an ``active``
+    worker mask rebuilds the operator on the induced subgraph
+    (``masked_metropolis``) for elastic membership.
   * :mod:`repro.dist.amb` — the paper's epoch update as SPMD train
     steps: ``make_train_step`` (exact consensus, any optimizer) and
     ``make_gossip_train_step`` (per-worker dual replicas, any strategy),
@@ -25,13 +38,15 @@ Layered public API (bottom up):
     a ``flush`` that settles the final in-flight consensus.
 
 The single-device simulator lives in :mod:`repro.core`; this package is
-the same math laid out on a mesh.
+the same math laid out on a mesh.  The uniform TrainState + epoch-driver
+wrapper over these steps is :mod:`repro.api.protocol`.
 """
 from .sharding import active_mesh, constrain, use_sharding   # noqa: F401
 from .params import param_spec, tree_shardings               # noqa: F401
 from .consensus import (ConsensusStrategy, ExactConsensus,   # noqa: F401
                         GossipConsensus, QuantizedGossipConsensus,
-                        make_strategy, torus_shape_for_mesh)
+                        make_strategy, masked_metropolis,
+                        torus_shape_for_mesh)
 from .amb import (AMBConfig, gossip_primal,                  # noqa: F401
                   make_gossip_train_step, make_train_step, num_workers,
                   pack_messages, ring_gossip, seq_weights_from_b,
@@ -42,7 +57,8 @@ __all__ = [
     "active_mesh", "constrain", "use_sharding", "param_spec",
     "tree_shardings", "ConsensusStrategy", "ExactConsensus",
     "GossipConsensus", "QuantizedGossipConsensus", "make_strategy",
-    "torus_shape_for_mesh", "AMBConfig", "gossip_primal",
+    "masked_metropolis", "torus_shape_for_mesh", "AMBConfig",
+    "gossip_primal",
     "make_gossip_train_step", "make_pipelined_gossip_train_step",
     "make_train_step", "num_workers", "pack_messages", "ring_gossip",
     "seq_weights_from_b", "strategy_from_config", "unpack_duals",

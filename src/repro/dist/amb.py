@@ -59,6 +59,9 @@ class AMBConfig:
     beta: BetaSchedule = BetaSchedule()   # gossip-path dual averaging
     radius: Optional[float] = None
     seed: int = 0                     # quantized-gossip PRNG stream
+    active: Optional[tuple] = None    # elastic worker mask (None = all);
+                                      # gossip taps rebuild on the induced
+                                      # active subgraph
 
 
 def strategy_from_config(amb: AMBConfig, mesh) -> ConsensusStrategy:
@@ -68,7 +71,8 @@ def strategy_from_config(amb: AMBConfig, mesh) -> ConsensusStrategy:
     if tshape is None and amb.graph == "torus":
         tshape = torus_shape_for_mesh(mesh)
     return make_strategy(amb.consensus, n, rounds=amb.gossip_rounds,
-                         graph=amb.graph, lazy=amb.lazy, torus_shape=tshape)
+                         graph=amb.graph, lazy=amb.lazy, torus_shape=tshape,
+                         active=amb.active)
 
 
 # ---------------------------------------------------------------------------
@@ -291,9 +295,24 @@ def make_gossip_train_step(cfg, mesh, amb: AMBConfig):
 
 def gossip_primal(state, amb: AMBConfig):
     """Node-averaged primal w̄(t) from a gossip-step state (checkpointing /
-    eval): the same prox the train step applies, on the worker-mean dual."""
+    eval): the same prox the train step applies, on the worker-mean dual.
+
+    Under an elastic ``amb.active`` mask only the active workers' dual
+    replicas are averaged — a departed worker's replica is frozen at its
+    leave-time value (identity gossip row) and would otherwise bias the
+    checkpoint away from the active set's consensus iterate.
+    """
     t = state["t"].astype(jnp.float32)
     beta_t = amb.beta(t + 1.0)
+    if amb.active is None:
+        zbar = lambda z: z.mean(0)
+    else:
+        w = np.asarray(amb.active, np.float32)
+        w = jnp.asarray(w / w.sum())
+
+        def zbar(z):
+            return jnp.tensordot(w, z, axes=(0, 0))
+
     return jax.tree.map(
-        lambda w0, z: _prox_leaf(z.mean(0), w0, beta_t, amb.radius),
+        lambda w0, z: _prox_leaf(zbar(z), w0, beta_t, amb.radius),
         state["w0"], state["z"])

@@ -106,6 +106,26 @@ def group_taps(p: np.ndarray, shape: Sequence[int]) -> Optional[Taps]:
                 weights=np.asarray(weights, np.float32), shape=shape)
 
 
+def masked_metropolis(adj: np.ndarray, active, lazy: float) -> np.ndarray:
+    """Metropolis weights on the subgraph induced by the ``active`` mask.
+
+    Elastic membership (worker join/leave): edges touching an inactive
+    worker are removed and the Metropolis degrees re-derived on the
+    induced subgraph, so active workers re-weight their remaining
+    neighbors instead of waiting on a departed one.  Inactive workers
+    become identity rows (they neither send nor relay; their stale dual
+    survives untouched until they rejoin).  The active subgraph must stay
+    connected — a partitioned fleet cannot reach consensus.
+    """
+    active = np.asarray(active, dtype=bool)
+    adj = np.asarray(adj, dtype=bool) & active[None, :] & active[:, None]
+    n_act = int(active.sum())
+    if n_act >= 2 and not cns.is_connected(adj[np.ix_(active, active)]):
+        raise ValueError("active worker subgraph is disconnected; "
+                         "consensus cannot mix across the partition")
+    return cns.metropolis_weights(adj, lazy=lazy)
+
+
 def roll_by_offset(x: Array, taps: Taps, off) -> Array:
     """``out[i] = x[i + off]`` over the taps' cyclic group (one tap)."""
     full = x.reshape(taps.shape + x.shape[1:])
@@ -162,11 +182,14 @@ class _TapGossip(ConsensusStrategy):
     """Shared P/tap construction for the gossip strategies."""
 
     def __init__(self, n: int, rounds: int, graph: str = "ring",
-                 lazy: float = 0.5, torus_shape: Optional[tuple] = None):
+                 lazy: float = 0.5, torus_shape: Optional[tuple] = None,
+                 active: Optional[Sequence[bool]] = None):
         self.n = int(n)
         self.rounds = int(rounds)
         self.graph = graph
         self.lazy = float(lazy)
+        self.active = None if active is None or all(active) \
+            else tuple(bool(a) for a in active)
         if n < 2:
             self.p, self.taps = np.ones((1, 1)), None
             return
@@ -179,8 +202,16 @@ class _TapGossip(ConsensusStrategy):
         else:
             adj = cns.build_graph(graph, n)
             shape = (n,)
-        self.p = cns.metropolis_weights(adj, lazy=lazy)
-        self.taps = group_taps(self.p, shape)
+        if self.active is not None:
+            if len(self.active) != n:
+                raise ValueError(f"active mask has {len(self.active)} "
+                                 f"entries for {n} workers")
+            # masked P is not group-circulant: run the dense operator
+            self.p = masked_metropolis(adj, self.active, lazy)
+            self.taps = None
+        else:
+            self.p = cns.metropolis_weights(adj, lazy=lazy)
+            self.taps = group_taps(self.p, shape)
 
     def wire_bytes_per_round(self, d: int) -> int:
         k = self.taps.k if self.taps is not None else self.n
@@ -235,8 +266,9 @@ class QuantizedGossipConsensus(_TapGossip):
 
     def __init__(self, n: int, rounds: int, bits: int = 8,
                  graph: str = "ring", lazy: float = 0.5,
-                 torus_shape: Optional[tuple] = None):
-        super().__init__(n, rounds, graph, lazy, torus_shape)
+                 torus_shape: Optional[tuple] = None,
+                 active: Optional[Sequence[bool]] = None):
+        super().__init__(n, rounds, graph, lazy, torus_shape, active)
         if bits not in (4, 8):
             raise ValueError("bits must be 4 or 8 (uint8 wire container)")
         self.bits = int(bits)
@@ -290,14 +322,26 @@ class QuantizedGossipConsensus(_TapGossip):
             lo = diff.min(axis=-1, keepdims=True)
             hi = diff.max(axis=-1, keepdims=True)
             scale = jnp.maximum(hi - lo, 1e-12) / levels
-            rnd = jax.random.uniform(jax.random.fold_in(key, k_round),
-                                     cur.shape)
+            # partitionable threefry: the rounding plane is drawn shard-
+            # locally; the sequential impl's u32 resharding costs more
+            # wire bytes per round than the u8 level planes themselves
+            # (must match core.extensions.quantize_unbiased's draws)
+            with jax.threefry_partitionable(True):
+                rnd = jax.random.uniform(jax.random.fold_in(key, k_round),
+                                         cur.shape)
             lvl, h_new = kops.stochastic_quantize(cur, h, rnd, lo, scale,
                                                   levels)
-            # -- the wire: rolled (nibble-packed) level planes + scalars
-            wire = self._pack(lvl)
+            # -- the wire: rolled (nibble-packed) level planes + scalars.
+            # The barriers pin the collective-permute to the uint8 plane:
+            # without them XLA hoists the u8->f32 dequant (and the 4-bit
+            # unpack) across the roll, putting fp32 on the interconnect
+            # and defeating the (32/bits)x byte saving (see the
+            # multipod_2x16x16 section of BENCH_dist.json).
+            wire = jax.lax.optimization_barrier(self._pack(lvl))
             lvl_r = jnp.stack([
-                self._unpack(roll_by_offset(wire, taps, o), d)
+                self._unpack(
+                    jax.lax.optimization_barrier(
+                        roll_by_offset(wire, taps, o)), d)
                 for o in nbr_offsets])
             lo_r = jnp.stack([roll_by_offset(lo, taps, o)
                               for o in nbr_offsets])
@@ -345,19 +389,25 @@ CONSENSUS_CHOICES = ("exact", "gossip", "gossip_q8", "gossip_q4")
 
 def make_strategy(name: str, n: int, *, rounds: int = 5,
                   graph: str = "ring", lazy: float = 0.5,
-                  torus_shape: Optional[tuple] = None) -> ConsensusStrategy:
+                  torus_shape: Optional[tuple] = None,
+                  active: Optional[Sequence[bool]] = None
+                  ) -> ConsensusStrategy:
     """Build a strategy from the AMBConfig vocabulary.
 
     ``name`` in {"exact", "gossip", "gossip_q8", "gossip_q4"}.  Quantized
-    strategies get (32/bits)x the rounds — same T_c byte budget.
+    strategies get (32/bits)x the rounds — same T_c byte budget.  An
+    ``active`` worker mask (elastic membership) rebuilds the gossip
+    operator on the induced subgraph via :func:`masked_metropolis`;
+    exact consensus needs no rebuild — a departed worker's zero-weighted
+    message (b_i = 0) already drops out of the eq.-6 average.
     """
     if name == "exact":
         return ExactConsensus(n)
     if name == "gossip":
-        return GossipConsensus(n, rounds, graph, lazy, torus_shape)
+        return GossipConsensus(n, rounds, graph, lazy, torus_shape, active)
     if name in ("gossip_q8", "gossip_q4"):
         bits = int(name[-1])
         return QuantizedGossipConsensus(n, rounds * 32 // bits, bits,
-                                        graph, lazy, torus_shape)
+                                        graph, lazy, torus_shape, active)
     raise ValueError(f"unknown consensus strategy {name!r}; "
                      f"choose from {CONSENSUS_CHOICES}")

@@ -19,9 +19,10 @@ from pathlib import Path  # noqa: E402
 import jax               # noqa: E402
 import numpy as np       # noqa: E402
 
+from ..api.protocol import build_protocol                    # noqa: E402
 from ..configs import ARCH_NAMES, SHAPES, get_config        # noqa: E402
 from ..dist import use_sharding                              # noqa: E402
-from ..dist.amb import AMBConfig, make_train_step            # noqa: E402
+from ..dist.amb import AMBConfig                             # noqa: E402
 from ..dist.params import tree_shardings                     # noqa: E402
 from ..models import decode_step, prefill                    # noqa: E402
 from ..optim import DualAveragingOpt                         # noqa: E402
@@ -49,8 +50,13 @@ _TRAFFIC_FACTOR = {"all-reduce": 2.0, "all-gather": 1.0,
 
 
 def parse_collectives(hlo_text: str) -> dict:
-    """Sum per-op result bytes for every collective in the (partitioned) HLO."""
-    out = {k: {"count": 0, "bytes": 0.0} for k in _TRAFFIC_FACTOR}
+    """Sum per-op result bytes for every collective in the (partitioned) HLO.
+
+    Each op also carries a ``by_dtype`` byte breakdown — how the quantized
+    wire shows up as u8 (vs fp32 / RNG-u32) in the collective-permutes.
+    """
+    out = {k: {"count": 0, "bytes": 0.0, "by_dtype": {}}
+           for k in _TRAFFIC_FACTOR}
     for m in _COLLECTIVE_RE.finditer(hlo_text):
         dt, dims, op = m.group(1), m.group(2), m.group(3)
         nbytes = _DTYPE_BYTES.get(dt, 4)
@@ -60,6 +66,8 @@ def parse_collectives(hlo_text: str) -> dict:
                 size *= int(d)
         out[op]["count"] += 1
         out[op]["bytes"] += size * nbytes
+        out[op]["by_dtype"][dt] = out[op]["by_dtype"].get(dt, 0) \
+            + size * nbytes
     out["traffic_bytes"] = sum(
         v["bytes"] * _TRAFFIC_FACTOR[k]
         for k, v in out.items() if k in _TRAFFIC_FACTOR)
@@ -101,13 +109,19 @@ def _lower_combo(cfg, shape, mesh):
     params_in = jax.tree.map(as_in, params_sds, pspecs)
 
     if shape.kind == "train":
+        from jax.sharding import NamedSharding, PartitionSpec as P
         opt = DualAveragingOpt()
-        step = make_train_step(cfg, opt, mesh, AMBConfig())
-        opt_sds = jax.eval_shape(opt.init, params_sds)
-        opt_in = jax.tree.map(as_in, opt_sds, tree_shardings(opt_sds, mesh))
+        proto = build_protocol(cfg, mesh, AMBConfig(), optimizer=opt)
+        # TrainState structure comes from the protocol itself; only the
+        # shardings are assigned here (params keep the fsdp choice above)
+        state_sds = jax.eval_shape(proto.init, params_sds)
+        state_specs = {"params": pspecs,
+                       "opt": tree_shardings(state_sds["opt"], mesh),
+                       "t": NamedSharding(mesh, P())}
+        state_in = jax.tree.map(as_in, state_sds, state_specs)
         batch = S.train_input_specs(cfg, shape, mesh)
         b = S.worker_batch_spec(mesh)
-        return jax.jit(step).lower(params_in, opt_in, batch, b)
+        return jax.jit(proto.step).lower(state_in, batch, b)
     if shape.kind == "prefill":
         batch = S.prefill_input_specs(cfg, shape, mesh)
         return jax.jit(lambda p, bt: prefill(p, cfg, bt)).lower(

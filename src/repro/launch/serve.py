@@ -1,13 +1,22 @@
-"""Batched serving driver: prefill a batch of prompts, then decode tokens.
+"""Batched serving driver: one :class:`repro.api.AMBSession` for both
+AMB fine-tuning and decode.
 
-The serving analogue of AMB's fixed-time contract: each decode *round* has a
-fixed wall-clock budget; requests are grouped into a batch, every round emits
-one token per active request (continuous batching over a fixed-shape slot
-array).
+The serving analogue of AMB's fixed-time contract: each decode *round* has
+a fixed wall-clock budget; requests are grouped into a batch, every round
+emits one token per active request (continuous batching over a fixed-shape
+slot array).
+
+``--finetune N`` runs N batch-parallel AMB fine-tuning steps through the
+session *before* decoding — the session owns the mesh, the sharded
+parameters, the clock, and the consensus strategy, and ``session.params``
+hands the post-fine-tune primal straight to prefill/decode.  With
+``--finetune 0`` (default) the session still does the mesh + param setup,
+so decode-only serving shares the exact same initialization path as
+training.
 
 Example:
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --smoke \
-      --batch 4 --prompt-len 64 --new-tokens 32
+      --batch 4 --prompt-len 64 --new-tokens 32 --finetune 8
 """
 from __future__ import annotations
 
@@ -17,11 +26,10 @@ import time
 import jax
 import jax.numpy as jnp
 
-from ..configs import get_config, smoke_config
+from ..api import AMBSession, ClockSpec, ConsensusSpec, TrainSpec
+from ..data import LMTokenStream
 from ..dist import use_sharding
-from ..dist.params import tree_shardings
-from ..models import decode_step, init_params, prefill
-from .mesh import make_host_mesh
+from ..models import decode_step, prefill
 
 
 def main(argv=None):
@@ -35,16 +43,44 @@ def main(argv=None):
     ap.add_argument("--model", type=int, default=1)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--greedy", action="store_true", default=True)
+    ap.add_argument("--finetune", type=int, default=0, metavar="STEPS",
+                    help="AMB fine-tuning steps to run through the "
+                         "session before decoding (0 = decode only)")
+    ap.add_argument("--finetune-seq-len", type=int, default=64)
+    ap.add_argument("--finetune-batch-per-worker", type=int, default=2)
+    from ..dist.consensus import CONSENSUS_CHOICES
+    ap.add_argument("--consensus", default="exact",
+                    choices=list(CONSENSUS_CHOICES),
+                    help="consensus strategy for --finetune")
     args = ap.parse_args(argv)
 
-    cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
-    mesh = make_host_mesh(args.data, args.model)
-    key = jax.random.PRNGKey(args.seed)
+    train = TrainSpec(arch=args.arch, smoke=args.smoke,
+                      seq_len=args.finetune_seq_len,
+                      batch_per_worker=args.finetune_batch_per_worker,
+                      data=args.data, model=args.model, seed=args.seed)
+    try:
+        session = AMBSession(train, ClockSpec(),
+                             ConsensusSpec(consensus=args.consensus))
+    except ValueError as e:
+        raise SystemExit(str(e))
+    cfg, mesh = session.cfg, session.mesh
 
+    if args.finetune:
+        stream = LMTokenStream(vocab_size=cfg.vocab_size,
+                               seq_len=args.finetune_seq_len,
+                               seed=args.seed)
+        t0 = time.time()
+        for step in range(args.finetune):
+            m = session.step(stream.batch(0, step, session.global_batch))
+            if step % 5 == 0 or step == args.finetune - 1:
+                print(f"finetune {step:3d} loss {m['loss']:.4f} "
+                      f"b(t)={m['global_batch']:.0f}")
+        session.flush()
+        print(f"finetune: {args.finetune} AMB steps in "
+              f"{time.time() - t0:.2f}s")
+
+    params = session.params      # the shared primal: fine-tuned or init
     with use_sharding(mesh):
-        params = init_params(key, cfg)
-        params = jax.tree.map(lambda p, sh: jax.device_put(p, sh), params,
-                              tree_shardings(params, mesh))
         toks = jax.random.randint(jax.random.PRNGKey(1),
                                   (args.batch, args.prompt_len), 0,
                                   cfg.vocab_size)

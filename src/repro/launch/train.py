@@ -1,19 +1,12 @@
-"""AMB training driver: real steps on whatever devices exist.
+"""AMB training driver: a thin CLI adapter over :class:`repro.api.AMBSession`.
 
-Runs an LM (reduced or full config) under the AMB protocol: every step a
-straggler clock converts the fixed budget T into per-worker minibatch
-sizes b_i(t), and the train step consumes the masked batch with weighted
-consensus + dual averaging.
-
-On the mesh path the clock is **measured** by default: the per-gradient
-time unit comes from an EMA of the real per-step wall-clock (the
-straggler model only supplies the relative cross-worker heterogeneity),
-so b_i(t) tracks the actual hardware rate instead of the simulated
-constants — pass ``--sim-clock`` to restore the paper-evaluation
-simulated clock.  Consensus is pluggable
-(``--consensus {exact,gossip,gossip_q8,gossip_q4}``, ``--graph
-{ring,torus}``) and ``--pipeline`` switches to the staleness-1 epoch
-that overlaps each step's gossip with the next forward/backward.
+Every flag maps onto one of the three session specs
+(:class:`repro.api.TrainSpec` / :class:`repro.api.ClockSpec` /
+:class:`repro.api.ConsensusSpec`); the session owns the mesh, the clock
+(measured by default, ``--sim-clock`` restores the paper-evaluation
+simulated clock — see :mod:`repro.api.clock`), the consensus strategy and
+the epoch driver.  This driver only streams batches, logs metrics, and
+checkpoints.
 
 Example (8 simulated devices, reduced qwen2, pipelined torus gossip):
   XLA_FLAGS=--xla_force_host_platform_device_count=8 \
@@ -24,211 +17,50 @@ Example (8 simulated devices, reduced qwen2, pipelined torus gossip):
 from __future__ import annotations
 
 import argparse
-import time
-
-import jax
-import jax.numpy as jnp
 
 from .. import metrics as metrics_mod
-from ..ckpt import save_checkpoint
-from ..configs import get_config, smoke_config
-from ..core.dual_averaging import BetaSchedule
-from ..core.stragglers import ShiftedExponential, amb_batch_sizes, fmb_finish_times
-from ..data import LMTokenStream, shard_batch
-from ..dist import use_sharding
-from ..dist.amb import (AMBConfig, gossip_primal, make_gossip_train_step,
-                        make_train_step, num_workers)
-from ..dist.consensus import CONSENSUS_CHOICES
-from ..dist.params import tree_shardings
-from ..dist.pipeline import make_pipelined_gossip_train_step
-from ..models import init_params
-from ..optim import make_optimizer
-from .mesh import make_host_mesh
-
-
-class MeasuredClock:
-    """b_i(t) from real per-step wall-clock timings (mesh path default).
-
-    The simulated straggler model keeps one job — supplying the *relative*
-    per-worker heterogeneity (its per-gradient draws divided by its own
-    mean) — while the absolute seconds-per-gradient unit is an EMA of the
-    measured step time divided by the gradients that step consumed.  The
-    Lemma-6 budget ``T = (1 + n/b) mu`` is re-derived from the measured
-    unit each step, so the epoch deadline tracks the actual hardware rate
-    (compile-time warmup, cache effects, CPU contention) instead of the
-    model's constants.
-    """
-
-    def __init__(self, model, n: int, batch_per_worker: int,
-                 ema: float = 0.7):
-        self.model = model
-        self.n = n
-        self.bpw = batch_per_worker
-        self.ema = ema
-        # model-relative unit: mean seconds per gradient in model time
-        self.model_unit = model.mean_batch_time() / model.b_ref
-        self.sec_per_grad = None      # measured EMA; None until first step
-
-    def update(self, step_seconds: float, global_b: float) -> None:
-        obs = step_seconds / max(global_b, 1.0)
-        self.sec_per_grad = (obs if self.sec_per_grad is None else
-                             self.ema * self.sec_per_grad
-                             + (1.0 - self.ema) * obs)
-
-    def times(self, key) -> jax.Array:
-        """(n, b_max) per-gradient times in *measured* seconds."""
-        rel = self.model.per_gradient_times(key, self.n, self.bpw) \
-            / self.model_unit                       # mean-1 heterogeneity
-        unit = self.sec_per_grad if self.sec_per_grad is not None \
-            else self.model_unit                    # pre-measurement boot
-        return rel * unit
-
-    def budget(self) -> float:
-        """Lemma-6 T in measured seconds: (1 + n/b) * mu_measured."""
-        unit = self.sec_per_grad if self.sec_per_grad is not None \
-            else self.model_unit
-        gb = self.n * self.bpw
-        return (1.0 + self.n / gb) * unit * self.bpw
+from ..api import AMBSession, ClockSpec, ConsensusSpec, TrainSpec
+from ..data import LMTokenStream
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="qwen2-1.5b")
-    ap.add_argument("--smoke", action="store_true",
-                    help="use the reduced config (CPU-friendly)")
+    TrainSpec.add_cli_args(ap)
+    ClockSpec.add_cli_args(ap)
+    ConsensusSpec.add_cli_args(ap)
     ap.add_argument("--steps", type=int, default=100)
-    ap.add_argument("--seq-len", type=int, default=256)
-    ap.add_argument("--batch-per-worker", type=int, default=8)
-    ap.add_argument("--data", type=int, default=1)
-    ap.add_argument("--model", type=int, default=1)
-    ap.add_argument("--optimizer", default="dual_averaging",
-                    choices=["dual_averaging", "adamw", "sgd"])
-    ap.add_argument("--mode", default="amb", choices=["amb", "fmb"])
-    ap.add_argument("--consensus", default="exact",
-                    choices=list(CONSENSUS_CHOICES),
-                    help="exact weighted all-reduce, decentralized gossip "
-                         "with per-worker dual replicas, or 8/4-bit "
-                         "quantized gossip (more rounds per T_c)")
-    ap.add_argument("--graph", default="ring", choices=["ring", "torus"],
-                    help="worker gossip graph; torus follows the physical "
-                         "(pod, data) mesh extents")
-    ap.add_argument("--pipeline", action="store_true",
-                    help="staleness-1 pipelined epochs: overlap each "
-                         "step's gossip with the next forward/backward")
-    ap.add_argument("--gossip-rounds", type=int, default=5)
-    ap.add_argument("--compute-time", type=float, default=None,
-                    help="AMB budget T; default from Lemma 6")
-    ap.add_argument("--comm-time", type=float, default=0.5)
-    ap.add_argument("--sim-clock", action="store_true",
-                    help="derive b_i(t) from the simulated straggler "
-                         "clock (paper evaluation) instead of measured "
-                         "per-step wall time")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--metrics", default=None)
-    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
-    cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
-    mesh = make_host_mesh(args.data, args.model)
-    n = num_workers(mesh)
-    gb = n * args.batch_per_worker
+    train = TrainSpec.from_args(args)
+    try:
+        session = AMBSession(train, ClockSpec.from_args(args),
+                             ConsensusSpec.from_args(args))
+    except ValueError as e:
+        raise SystemExit(str(e))
 
-    key = jax.random.PRNGKey(args.seed)
-    straggler = ShiftedExponential(lam=2.0 / 3.0, zeta=1.0,
-                                   b_ref=args.batch_per_worker)
-    # Lemma 6: T = (1 + n/b) mu  (simulated-clock units)
-    mu = straggler.mean_batch_time()
-    t_budget = args.compute_time or (1.0 + n / gb) * mu
-    clock = None if args.sim_clock else MeasuredClock(
-        straggler, n, args.batch_per_worker)
-
-    beta_sched = BetaSchedule(k=50.0, mu=float(gb), scale=200.0)
-    if args.optimizer == "dual_averaging":
-        opt = make_optimizer("dual_averaging", beta=beta_sched)
-    else:
-        opt = make_optimizer(args.optimizer)
-
-    stream = LMTokenStream(vocab_size=cfg.vocab_size, seq_len=args.seq_len,
-                           seed=args.seed)
+    stream = LMTokenStream(vocab_size=session.cfg.vocab_size,
+                           seq_len=train.seq_len, seed=train.seed)
     logger = metrics_mod.MetricsLogger(
-        args.metrics or f"artifacts/train_{args.arch}_{args.mode}.jsonl")
+        args.metrics or f"artifacts/train_{train.arch}_{train.mode}.jsonl")
 
-    gossip = args.consensus != "exact" or args.pipeline
-    if gossip and args.optimizer != "dual_averaging":
-        raise SystemExit("--consensus gossip / --pipeline run the paper's "
-                         "dual-averaging protocol; use --optimizer "
-                         "dual_averaging")
-    amb_cfg = AMBConfig(
-        consensus=args.consensus, gossip_rounds=args.gossip_rounds,
-        graph=args.graph, beta=beta_sched, seed=args.seed)
-
-    flush_fn = None
-    with use_sharding(mesh):
-        params = init_params(key, cfg)
-        params = jax.tree.map(
-            lambda p, sh: jax.device_put(p, sh), params,
-            tree_shardings(params, mesh))
-        if gossip:
-            if args.pipeline:
-                init_state, gstep, flush = make_pipelined_gossip_train_step(
-                    cfg, mesh, amb_cfg)
-                flush_fn = jax.jit(flush)
-            else:
-                init_state, gstep = make_gossip_train_step(
-                    cfg, mesh, amb_cfg)
-            gossip_state = init_state(params)
-            gstep_fn = jax.jit(gstep)
-        else:
-            opt_state = opt.init(params)
-            step_fn = jax.jit(make_train_step(cfg, opt, mesh, amb_cfg))
-
-        wall = 0.0
-        for step in range(args.steps):
-            skey = jax.random.fold_in(key, 10_000 + step)
-            if clock is not None:
-                times = clock.times(skey)
-                budget = args.compute_time or clock.budget()
-            else:
-                times = straggler.per_gradient_times(
-                    skey, n, args.batch_per_worker)
-                budget = t_budget
-            if args.mode == "amb":
-                b = amb_batch_sizes(times, budget)
-                # pipelined epochs hide T_c under the next epoch's compute
-                wall += max(budget, args.comm_time) if args.pipeline \
-                    else budget + args.comm_time
-            else:
-                b = jnp.full((n,), args.batch_per_worker, jnp.int32)
-                wall += float(jnp.max(fmb_finish_times(
-                    times, args.batch_per_worker))) + args.comm_time
-            batch = stream.batch(0, step, gb)
-            batch = shard_batch(batch, mesh,
-                                tuple(a for a in ("pod", "data")
-                                      if a in mesh.axis_names))
-            t0 = time.time()
-            if gossip:
-                gossip_state, m = gstep_fn(gossip_state, batch, b)
-            else:
-                params, opt_state, m = step_fn(params, opt_state, batch, b)
-            loss = float(m["loss"])
-            step_s = time.time() - t0
-            if clock is not None:
-                clock.update(step_s, float(m["global_batch"]))
-            logger.log(step, loss=loss, global_batch=float(m["global_batch"]),
-                       sim_wall_s=wall, step_s=step_s,
-                       budget_s=float(budget))
-            if step % 10 == 0 or step == args.steps - 1:
-                print(f"step {step:4d} loss {loss:.4f} "
-                      f"b(t)={float(m['global_batch']):.0f} "
-                      f"T={float(budget):.3f}s "
-                      f"sim_wall={wall:.1f}s")
-        if gossip and flush_fn is not None:
-            gossip_state = flush_fn(gossip_state)   # settle in-flight gossip
-        if args.ckpt_dir:
-            if gossip:
-                params = gossip_primal(gossip_state, amb_cfg)
-            save_checkpoint(args.ckpt_dir, args.steps, params)
-            print(f"checkpoint saved to {args.ckpt_dir}")
+    loss = None          # a zero-step run is a well-defined no-op
+    for step in range(args.steps):
+        m = session.step(stream.batch(0, step, session.global_batch))
+        loss = m["loss"]
+        logger.log(step, loss=loss, global_batch=m["global_batch"],
+                   sim_wall_s=m["sim_wall_s"], step_s=m["step_s"],
+                   budget_s=m["budget_s"])
+        if step % 10 == 0 or step == args.steps - 1:
+            print(f"step {step:4d} loss {loss:.4f} "
+                  f"b(t)={m['global_batch']:.0f} "
+                  f"T={m['budget_s']:.3f}s "
+                  f"sim_wall={m['sim_wall_s']:.1f}s")
+    session.flush()      # settle in-flight gossip (pipelined mode)
+    if args.ckpt_dir:
+        session.save(args.ckpt_dir)
+        print(f"checkpoint saved to {args.ckpt_dir}")
     logger.close()
     return loss
 
