@@ -1,15 +1,18 @@
 # Repro convenience targets.  `make verify` is the tier-1 gate.
 
-.PHONY: verify verify-fast smoke bench-dist
+.PHONY: verify verify-fast smoke docs-check bench-dist
 
-verify:               # API smoke stage + full pytest suite
+verify:               # docs check + API smoke + full pytest suite
 	scripts/verify.sh
 
-verify-fast:          # fast lane: API smoke + pytest -m 'not slow'
+verify-fast:          # fast lane: docs + smoke + pytest -m 'not slow'
 	scripts/verify.sh --fast
 
 smoke:                # just the programmatic-API smoke example
 	JAX_PLATFORMS=cpu PYTHONPATH=src python -m examples.api_session --smoke
+
+docs-check:           # README/docs references must match the code
+	python scripts/check_docs.py
 
 bench-dist:
 	PYTHONPATH=src python -m benchmarks.dist_step --steps 6

@@ -5,13 +5,16 @@ Demonstrates the whole Session surface on 8 simulated host devices:
   1. specs — build ``TrainSpec`` / ``ClockSpec`` / ``ConsensusSpec``,
      round-trip them through JSON (what a job file would store),
   2. train — ``session.step(batch)`` under the paper's fixed-time
-     contract (simulated straggler clock, torus gossip consensus),
+     contract (simulated straggler clock, torus gossip consensus,
+     AMB-DG async epochs: two consensus payloads in flight),
   3. elastic membership — ``session.set_active(mask)`` drops a worker
-     mid-run (its b_i(t) pins to 0 and the gossip taps rebuild on the
-     active subgraph), then re-admits it,
+     mid-run (its b_i(t) pins to 0, in-flight consensus drains, and the
+     gossip taps rebuild on the active subgraph), then re-admits it,
   4. serve — ``session.flush()`` + ``session.params`` hand the trained
      primal to greedy decode,
-  5. checkpoint — ``session.save(dir)``.
+  5. checkpoint + restore — ``session.save(dir)`` then
+     ``AMBSession.restore(dir)`` resumes params, dual state, and the
+     step counter exactly.
 
     PYTHONPATH=src python -m examples.api_session --smoke
 """
@@ -47,7 +50,8 @@ def main(argv=None):
                       batch_per_worker=2, data=4, model=2)
     clock = ClockSpec(kind="simulated")          # paper-evaluation clock
     consensus = ConsensusSpec(consensus="gossip", graph="torus",
-                              gossip_rounds=4)
+                              gossip_rounds=4, async_epochs=True,
+                              staleness=2)       # AMB-DG delayed epochs
     assert TrainSpec.from_json(train.to_json()) == train
     print("specs:", train.to_json())
 
@@ -94,10 +98,22 @@ def main(argv=None):
         gen = jnp.stack(out, axis=1)
     print("decoded token ids (first request):", gen[0].tolist())
 
-    # 5. checkpoint the primal (works identically in every mode)
+    # 5. checkpoint + restore: save writes the primal plus the full
+    # TrainState (dual replicas, in-flight queue, step counter);
+    # restore resumes the training trajectory exactly
     with tempfile.TemporaryDirectory() as d:
         session.save(d)
         print(f"checkpoint saved under {d} at step {session.steps_done}")
+        restored = AMBSession.restore(d)
+        assert restored.steps_done == session.steps_done
+        err = max(float(jnp.abs(a - b).max()) for a, b in
+                  zip(jax.tree.leaves(session.params),
+                      jax.tree.leaves(restored.params)))
+        assert err == 0.0, f"restore drifted: {err}"
+        m = restored.step(stream.batch(0, steps + 2,
+                                       restored.global_batch))
+        print(f"restored at step {restored.steps_done - 1}, "
+              f"continued: loss {m['loss']:.4f}")
     print("OK")
     return 0
 

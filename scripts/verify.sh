@@ -3,9 +3,11 @@
 # so the suite behaves identically with or without accelerators attached.
 # Mesh-heavy subprocess tests force their own device counts internally.
 #
-#   scripts/verify.sh                # full tier-1 run (API smoke + pytest)
+#   scripts/verify.sh                # full tier-1 run (docs check + API
+#                                    # smoke + pytest)
 #   scripts/verify.sh --fast         # fast lane: skip the mesh-heavy
-#                                    # subprocess tests (-m 'not slow')
+#                                    # subprocess tests (-m 'not slow');
+#                                    # docs check + smoke still run
 #   scripts/verify.sh -m 'not slow'  # extra pytest args pass through
 #   scripts/verify.sh --no-smoke ... # skip the API smoke stage
 set -euo pipefail
@@ -23,7 +25,12 @@ for arg in "$@"; do
   esac
 done
 
+echo "== docs check: python scripts/check_docs.py =="
+# README/docs module paths, CLI flags, and local links must exist
+python scripts/check_docs.py
+
 if [[ "$smoke" == 1 ]]; then
+  # runs in the --fast lane too: the example IS the API's executable doc
   echo "== API smoke: python -m examples.api_session --smoke =="
   # under JAX_PLATFORMS=cpu the example forces its own 8 host devices
   # via XLA_FLAGS, so this behaves identically with or without

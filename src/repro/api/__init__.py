@@ -23,14 +23,15 @@ one session object:
 ``examples/api_session.py`` for programmatic use.
 """
 from .clock import Clock, MeasuredClock, SimulatedClock, make_clock  # noqa: F401
-from .protocol import (ExactProtocol, GossipProtocol,                # noqa: F401
-                       PipelinedProtocol, TrainProtocol, build_protocol)
+from .protocol import (AsyncProtocol, ExactProtocol,                 # noqa: F401
+                       GossipProtocol, PipelinedProtocol, TrainProtocol,
+                       build_protocol)
 from .session import AMBSession                                      # noqa: F401
 from .specs import ClockSpec, ConsensusSpec, TrainSpec               # noqa: F401
 
 __all__ = [
-    "AMBSession", "Clock", "ClockSpec", "ConsensusSpec", "ExactProtocol",
-    "GossipProtocol", "MeasuredClock", "PipelinedProtocol",
-    "SimulatedClock", "TrainProtocol", "TrainSpec", "build_protocol",
-    "make_clock",
+    "AMBSession", "AsyncProtocol", "Clock", "ClockSpec", "ConsensusSpec",
+    "ExactProtocol", "GossipProtocol", "MeasuredClock",
+    "PipelinedProtocol", "SimulatedClock", "TrainProtocol", "TrainSpec",
+    "build_protocol", "make_clock",
 ]

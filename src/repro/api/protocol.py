@@ -24,6 +24,12 @@ counter ``"t"``; the mode-specific leaves are documented per protocol:
     staleness-1 pipelined epoch
     (:func:`repro.dist.pipeline.make_pipelined_gossip_train_step`);
     ``flush`` settles the final in-flight message.
+  * :class:`AsyncProtocol` — ``{"z", "w0", "t", "queue"}``: AMB-DG
+    bounded-staleness delayed-gradient epochs
+    (:func:`repro.dist.async_epochs.make_async_gossip_train_step`);
+    ``queue`` holds the D in-flight consensus payloads and ``flush``
+    settles them all in enqueue order.  At ``staleness=1`` the step and
+    flush graphs are identical to :class:`PipelinedProtocol`.
 
 :func:`build_protocol` replaces the drivers' former three-way
 ``if gossip / if pipeline`` branching; launch, serve, dry-run, and the
@@ -38,6 +44,7 @@ import jax.numpy as jnp
 
 from ..dist.amb import (AMBConfig, gossip_primal, make_gossip_train_step,
                         make_train_step)
+from ..dist.async_epochs import make_async_gossip_train_step
 from ..dist.pipeline import make_pipelined_gossip_train_step
 
 TrainState = dict      # pytree; always carries "t", see module docstring
@@ -126,24 +133,70 @@ class PipelinedProtocol(TrainProtocol):
         return gossip_primal(state, self.amb)
 
 
-def build_protocol(cfg, mesh, amb: AMBConfig, *, optimizer=None,
-                   pipeline: bool = False) -> TrainProtocol:
-    """The right :class:`TrainProtocol` for (consensus, pipeline, optimizer).
+class AsyncProtocol(TrainProtocol):
+    """AMB-DG bounded-staleness epochs.  State: z/w0/t/queue.
 
-    ``pipeline=True`` or a non-exact consensus selects the decentralized
-    dual-averaging family (per-worker replicas); exact consensus without
-    pipelining runs the single-program weighted step under ``optimizer``.
-    Elastic membership rides on ``amb.active`` (a worker bool mask): the
-    gossip operator is rebuilt on the induced active subgraph — the hook
-    behind :meth:`repro.api.AMBSession.set_active`.
+    ``queue`` is a length-``staleness`` tuple of in-flight consensus
+    payloads, oldest first; each step settles the due head, computes
+    delayed gradients at the last settled dual, and enqueues at the
+    tail.  ``flush`` drains the whole queue.
+    """
+
+    mode = "async"
+
+    def __init__(self, cfg, mesh, amb: AMBConfig, staleness: int = 1):
+        self.amb = amb
+        self.staleness = staleness
+        self._init, self._step, self._flush = \
+            make_async_gossip_train_step(cfg, mesh, amb, staleness)
+
+    def init(self, params) -> TrainState:
+        return self._init(params)
+
+    def step(self, state, batch, b):
+        return self._step(state, batch, b)
+
+    def flush(self, state):
+        return self._flush(state)
+
+    def primal(self, state):
+        return gossip_primal(state, self.amb)
+
+
+def build_protocol(cfg, mesh, amb: AMBConfig, *, optimizer=None,
+                   pipeline: bool = False, async_epochs: bool = False,
+                   staleness: int = 1) -> TrainProtocol:
+    """The right :class:`TrainProtocol` for (consensus, driver, optimizer).
+
+    ``pipeline=True``, ``async_epochs=True``, or a non-exact consensus
+    selects the decentralized dual-averaging family (per-worker
+    replicas); exact consensus without either driver runs the
+    single-program weighted step under ``optimizer``.  ``async_epochs``
+    generalizes ``pipeline`` to a bounded-staleness in-flight queue of
+    ``staleness`` consensus payloads (AMB-DG); the two drivers are
+    mutually exclusive.  Elastic membership rides on ``amb.active`` (a
+    worker bool mask): the gossip operator is rebuilt on the induced
+    active subgraph — the hook behind
+    :meth:`repro.api.AMBSession.set_active`.
     """
     from ..optim import DualAveragingOpt
-    decentralized = pipeline or amb.consensus != "exact"
+    if pipeline and async_epochs:
+        raise ValueError("--pipeline is the hardcoded staleness-1 driver; "
+                         "--async generalizes it — choose one (async with "
+                         "staleness 1 is the pipelined schedule)")
+    if staleness != 1 and not async_epochs:
+        raise ValueError(f"staleness={staleness} is the async driver's "
+                         "knob; pass --async (async_epochs=True) — "
+                         "without it the staleness would be silently "
+                         "ignored")
+    decentralized = pipeline or async_epochs or amb.consensus != "exact"
     if decentralized and optimizer is not None and \
             not isinstance(optimizer, DualAveragingOpt):
-        raise ValueError("gossip / pipelined modes run the paper's "
+        raise ValueError("gossip / pipelined / async modes run the paper's "
                          "dual-averaging protocol; use the dual_averaging "
                          "optimizer")
+    if async_epochs:
+        return AsyncProtocol(cfg, mesh, amb, staleness)
     if pipeline:
         return PipelinedProtocol(cfg, mesh, amb)
     if amb.consensus != "exact":

@@ -27,14 +27,16 @@ from its (stale) dual replica and consensus re-mixes it in.
 """
 from __future__ import annotations
 
+import json
 import time
+from pathlib import Path
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..ckpt import save_checkpoint
+from ..ckpt import load_checkpoint, save_checkpoint
 from ..configs import get_config, smoke_config
 from ..core.stragglers import amb_batch_sizes, fmb_finish_times
 from ..data import shard_batch
@@ -90,9 +92,11 @@ class AMBSession:
 
         self.clock = make_clock(self.clock_spec, self.n_workers,
                                 train.batch_per_worker)
+        self._decentralized = (self.consensus_spec.pipeline
+                               or self.consensus_spec.async_epochs
+                               or self.consensus_spec.consensus != "exact")
         self._optimizer = None
-        if not (self.consensus_spec.pipeline
-                or self.consensus_spec.consensus != "exact"):
+        if not self._decentralized:
             if train.optimizer == "dual_averaging":
                 self._optimizer = make_optimizer(
                     "dual_averaging",
@@ -100,8 +104,8 @@ class AMBSession:
             else:
                 self._optimizer = make_optimizer(train.optimizer)
         elif train.optimizer != "dual_averaging":
-            raise ValueError("gossip / pipelined modes run the paper's "
-                             "dual-averaging protocol; use "
+            raise ValueError("gossip / pipelined / async modes run the "
+                             "paper's dual-averaging protocol; use "
                              "optimizer='dual_averaging'")
 
         self._key = jax.random.PRNGKey(train.seed)
@@ -130,15 +134,15 @@ class AMBSession:
         by mask, so a worker rejoining a previously-seen configuration
         reuses the warm jitted executable instead of recompiling.
         """
-        decentralized = (self.consensus_spec.pipeline
-                         or self.consensus_spec.consensus != "exact")
-        key = active if decentralized else None
+        key = active if self._decentralized else None
         if key not in self._protocols:
             amb = self.consensus_spec.to_amb_config(
                 self.global_batch, self.train.seed, active=key)
-            proto = build_protocol(self.cfg, self.mesh, amb,
-                                   optimizer=self._optimizer,
-                                   pipeline=self.consensus_spec.pipeline)
+            proto = build_protocol(
+                self.cfg, self.mesh, amb, optimizer=self._optimizer,
+                pipeline=self.consensus_spec.pipeline,
+                async_epochs=self.consensus_spec.async_epochs,
+                staleness=self.consensus_spec.staleness)
             self._protocols[key] = (proto, jax.jit(proto.step),
                                     jax.jit(proto.flush))
         self.protocol, self._step_fn, self._flush_fn = self._protocols[key]
@@ -163,6 +167,14 @@ class AMBSession:
         subgraph.  The TrainState (params / dual replicas) is preserved,
         so a later ``set_active`` that re-admits the worker resumes it
         from its stale dual and lets consensus pull it back in.
+
+        In-flight consensus is **drained first** (pipelined / async
+        modes): a queued payload was packed for the *old* membership's
+        gossip operator, so it settles under the operator it was
+        enqueued against before the taps rebuild.  The drain is a plain
+        ``flush`` — always a valid state transition — so a subsequently
+        rejected mask (e.g. one that disconnects the gossip graph) still
+        leaves the session in a consistent, merely-settled state.
         """
         mask = np.asarray(mask, dtype=bool).reshape(-1)
         if mask.shape[0] != self.n_workers:
@@ -171,8 +183,10 @@ class AMBSession:
         if not mask.any():
             raise ValueError("at least one worker must stay active")
         active = None if mask.all() else tuple(bool(m) for m in mask)
-        # build first, commit second: a rejected mask (e.g. one that
-        # disconnects the gossip graph) must leave the session unchanged
+        if active != self._active:
+            self.flush()     # drain in-flight rounds under the old operator
+        # build first, commit second: a rejected mask must leave the
+        # session unchanged (modulo the always-valid drain above)
         self._build_protocol(active)
         self._active = active
 
@@ -204,12 +218,21 @@ class AMBSession:
             if b is None:
                 b = self.epoch_sizes(times, budget)
             # simulated wall clock: pipelined epochs hide T_c under the
-            # next epoch's compute; FMB waits for the slowest worker
+            # next epoch's compute; async epochs give each consensus D
+            # compute windows, so only T_c/D must fit per epoch; FMB
+            # waits for the slowest worker
             if self.train.mode == "amb":
-                self.sim_wall += (
-                    max(float(budget), self.clock_spec.comm_time)
-                    if self.consensus_spec.pipeline
-                    else float(budget) + self.clock_spec.comm_time)
+                spec = self.consensus_spec
+                if spec.async_epochs:
+                    self.sim_wall += max(
+                        float(budget),
+                        self.clock_spec.comm_time / spec.staleness)
+                elif spec.pipeline:
+                    self.sim_wall += max(float(budget),
+                                         self.clock_spec.comm_time)
+                else:
+                    self.sim_wall += (float(budget)
+                                      + self.clock_spec.comm_time)
             else:
                 self.sim_wall += float(jnp.max(fmb_finish_times(
                     times, self.train.batch_per_worker))) \
@@ -249,5 +272,87 @@ class AMBSession:
             return self.protocol.primal(self.state)
 
     def save(self, directory) -> None:
-        """Checkpoint the primal at the current step count (any mode)."""
+        """Checkpoint the primal + full TrainState at the current step.
+
+        Layout: ``<dir>/step_<n>/`` keeps the primal-only public layout
+        (what ``launch/serve`` style consumers read), and two restore
+        companions are written alongside: ``<dir>/session_state/
+        step_<n>/`` — the protocol TrainState (optimizer or dual-replica
+        state, any in-flight consensus queue, the epoch counter) — and
+        ``<dir>/session.json`` — the spec triple plus session counters.
+        Together they let :meth:`restore` resume exactly.
+        """
+        directory = Path(directory)
         save_checkpoint(directory, self.steps_done, self.params)
+        state_dir = save_checkpoint(directory / "session_state",
+                                    self.steps_done, self.state)
+        meta = {
+            "step": self.steps_done,
+            "sim_wall_s": self.sim_wall,
+            "train": self.train.to_dict(),
+            "clock": self.clock_spec.to_dict(),
+            "consensus": self.consensus_spec.to_dict(),
+            "active": None if self._active is None else list(self._active),
+            "sec_per_grad": getattr(self.clock, "sec_per_grad", None),
+        }
+        blob = json.dumps(meta, sort_keys=True, indent=1)
+        # per-step copy first: counters/mask must match the state they
+        # describe when restore() selects an older step; the root copy
+        # names the latest step (the restore default)
+        (state_dir / "session.json").write_text(blob)
+        (directory / "session.json").write_text(blob)
+
+    @classmethod
+    def restore(cls, directory, *, step: Optional[int] = None, mesh=None,
+                cfg=None) -> "AMBSession":
+        """Rebuild a session from a :meth:`save` directory, resuming exactly.
+
+        Recovers the spec triple from ``session.json``, then the full
+        TrainState — parameters, optimizer / dual-replica state
+        (including any in-flight consensus queue), and the step counter
+        — plus the simulated wall clock, the measured-clock EMA, and the
+        elastic membership mask.  A restored session continues the
+        training trajectory of the saved one step-for-step.
+
+        ``step`` selects a checkpoint (default: the latest, named in the
+        root ``session.json``); counters, clock EMA, and the membership
+        mask come from that step's own metadata copy, so an older
+        checkpoint resumes *its* trajectory, not the latest save's.
+        ``mesh`` / ``cfg`` override the rebuilt mesh or architecture
+        config (shapes must match the checkpoint — ``cfg`` is required
+        when the saved session used a custom one).
+        """
+        directory = Path(directory)
+        meta = json.loads((directory / "session.json").read_text())
+        step_sel = meta["step"] if step is None else step
+        per_step = (directory / "session_state" / f"step_{step_sel:08d}"
+                    / "session.json")
+        if per_step.exists():
+            meta = json.loads(per_step.read_text())
+        session = cls(TrainSpec.from_dict(meta["train"]),
+                      ClockSpec.from_dict(meta["clock"]),
+                      ConsensusSpec.from_dict(meta["consensus"]),
+                      mesh=mesh, cfg=cfg)
+        if meta.get("active") is not None:
+            session.set_active(meta["active"])   # before the state lands:
+            # the drain-on-change flush must not touch the restored queue
+        state = load_checkpoint(directory / "session_state", step_sel,
+                                like=session.state)
+
+        def land(got, cur):
+            # re-establish the mesh layout of the freshly-built state;
+            # leaves the protocol init left uncommitted (scalars like the
+            # epoch counter) must stay uncommitted, or jit refuses to mix
+            # them with the mesh-sharded leaves
+            if isinstance(cur.sharding, jax.sharding.NamedSharding):
+                return jax.device_put(got, cur.sharding)
+            return jnp.asarray(got)
+
+        with use_sharding(session.mesh):
+            session.state = jax.tree.map(land, state, session.state)
+        session.steps_done = step_sel
+        session.sim_wall = float(meta.get("sim_wall_s", 0.0))
+        if meta.get("sec_per_grad") is not None \
+                and hasattr(session.clock, "sec_per_grad"):
+            session.clock.sec_per_grad = float(meta["sec_per_grad"])
+        return session

@@ -176,7 +176,13 @@ class ClockSpec(_Spec):
 
 @dataclasses.dataclass(frozen=True)
 class ConsensusSpec(_Spec):
-    """Consensus strategy + epoch driver (sequential vs pipelined)."""
+    """Consensus strategy + epoch driver (sequential / pipelined / async).
+
+    ``pipeline`` is the hardcoded staleness-1 overlap;
+    ``async_epochs`` + ``staleness`` generalize it to AMB-DG
+    bounded-staleness delayed-gradient epochs (``staleness`` in-flight
+    consensus payloads).  The two drivers are mutually exclusive.
+    """
 
     consensus: str = "exact"          # exact | gossip | gossip_q8 | gossip_q4
     graph: str = "ring"               # worker gossip graph
@@ -184,6 +190,8 @@ class ConsensusSpec(_Spec):
     torus_shape: Optional[Tuple[int, int]] = None  # default: mesh extents
     lazy: float = 0.5                 # lazy-Metropolis mixing (PSD P)
     pipeline: bool = False            # staleness-1 pipelined epochs
+    async_epochs: bool = False        # AMB-DG bounded-staleness epochs
+    staleness: int = 1                # D: in-flight consensus payloads
     radius: Optional[float] = None    # prox trust-region (paper eq. 7)
     beta_k: float = 50.0              # BetaSchedule knobs; beta_mu=None
     beta_mu: Optional[float] = None   # defaults to the global batch b
@@ -221,9 +229,20 @@ class ConsensusSpec(_Spec):
         ap.add_argument("--pipeline", action="store_true",
                         help="staleness-1 pipelined epochs: overlap each "
                              "step's gossip with the next forward/backward")
+        ap.add_argument("--async", dest="async_epochs", action="store_true",
+                        help="AMB-DG delayed-gradient epochs: consensus "
+                             "settles asynchronously with bounded "
+                             "staleness (--staleness); generalizes "
+                             "--pipeline beyond staleness 1")
+        ap.add_argument("--staleness", type=int,
+                        default=ConsensusSpec.staleness,
+                        help="D: number of in-flight consensus payloads "
+                             "under --async (1 = the pipelined schedule)")
 
     @classmethod
     def from_args(cls, args: argparse.Namespace) -> "ConsensusSpec":
         return cls(consensus=args.consensus, graph=args.graph,
                    gossip_rounds=args.gossip_rounds,
-                   pipeline=args.pipeline)
+                   pipeline=args.pipeline,
+                   async_epochs=args.async_epochs,
+                   staleness=args.staleness)

@@ -15,6 +15,11 @@ frontier:
    classic delayed-gradient trick (Dekel et al. 2012 §4; staleness 1), and
    dual averaging is robust to it: the extra regret term is
    O(K * sum_t ||w(t) - w(t-1)||) = O(sqrt(m)) — same order as the bound.
+   ``run_amb_delayed`` generalizes the overlap to *bounded staleness D*
+   (AMB-DG): a FIFO of D in-flight consensus payloads, gradients at the
+   last settled iterate, per-epoch wall time max(T, T_c/D) — the
+   single-device reference for
+   :func:`repro.dist.async_epochs.make_async_gossip_train_step`.
 
 2. **Quantized gossip** (``run_amb_quantized``) — consensus rounds under a
    fixed T_c are limited by message *bytes* on a slow fabric.  Stochastic
@@ -137,6 +142,123 @@ def run_amb_pipelined(objective, model: StragglerModel, cfg: EngineConfig, *,
 
     (_, _, _, _, _), tr = jax.lax.scan(
         epoch, (w0, z0, jnp.float32(0.0), stale_g0, stale_b0),
+        jnp.arange(1, epochs + 1))
+    return History(
+        wall_time=tr["wall_time"], batch_sizes=tr["batch_sizes"],
+        global_batch=tr["global_batch"], eval_loss=tr["eval_loss"],
+        train_loss=tr["train_loss"], consensus_eps=tr["consensus_eps"],
+        regret=jnp.cumsum(tr["regret_inc"]),
+        potential_samples=tr["potential"])
+
+
+# ---------------------------------------------------------------------------
+# 1b. Delayed-gradient AMB (AMB-DG): bounded staleness D
+# ---------------------------------------------------------------------------
+
+def run_amb_delayed(objective, model: StragglerModel, cfg: EngineConfig, *,
+                    staleness: int, epochs: int, key: Array,
+                    sample_args=(),
+                    eval_fn: Optional[Callable[[Array], Array]] = None,
+                    f_star: float = 0.0) -> History:
+    """AMB with bounded-staleness delayed gradients (AMB-DG reference).
+
+    The single-device analogue of
+    :func:`repro.dist.async_epochs.make_async_gossip_train_step`: a FIFO
+    of ``staleness`` in-flight consensus payloads.  Epoch t settles the
+    payload enqueued at epoch ``t - D`` (its consensus has had D compute
+    windows to complete), computes gradients at the last *settled*
+    iterate — delayed by D epochs — and enqueues ``n b_i (z_i + g_i)``
+    on the settled dual.  The settle is an *increment* against a
+    snapshot of the dual the payload was packed on, with the dual term
+    mixing-damped by ``gamma = 1/(2D)`` on the wire (see
+    :mod:`repro.dist.async_epochs`): ``payload = n b (gamma z + g)``
+    and ``z <- z + (agreed - gamma snapshot)`` — the full-strength
+    weighted-mean gradient plus a gamma-damped consensus pull.  The
+    damping is what keeps deep staleness stable: a D-delayed
+    contraction at full strength has unit-circle-crossing roots for
+    D >= 2, while replacing the dual outright would split it into D
+    interleaved chains (divergent too); at D = 1 gamma = 1 recovers
+    the sequential update.  Dual averaging tolerates the staleness (the
+    extra
+    regret term is O(D * sum_t ||w(t) - w(t-1)||), same order as the
+    bound for constant D), and the wall-clock per epoch drops from
+    ``T + T_c`` to ``max(T, T_c / D)`` — consensus no longer needs to
+    fit in one window, only to sustain one settle per window.
+
+    ``staleness=0`` is the sequential protocol (settle-before-update,
+    no delay) and is rejected here to keep the queue shape static; use
+    :func:`repro.core.engine.run_amb` for that.
+    """
+    if staleness < 1:
+        raise ValueError(f"staleness must be >= 1, got {staleness}")
+    p = jnp.asarray(cfg.build_p(), jnp.float32)
+    d = objective.init_w().shape[0]
+    n = cfg.n
+    D = staleness
+    eval_fn = eval_fn or (lambda w_bar: jnp.float32(0.0))
+
+    gamma = 1.0 if D == 1 else 1.0 / (2.0 * D)   # delayed-mixing damping
+
+    w0 = jnp.zeros((n, d), jnp.float32)
+    z0 = jnp.zeros((n, d), jnp.float32)
+    queue0 = jnp.zeros((D, n, d + 1), jnp.float32)   # payload | weight col
+    snaps0 = jnp.zeros((D, n, d), jnp.float32)       # dual at enqueue time
+
+    def settle(z, payload, snapshot):
+        """One queued payload's consensus folded into the dual as the
+        increment ``agreed - gamma * snapshot``; zero payloads no-op."""
+        if cfg.consensus_mode == "exact":
+            out = cns.exact_average(payload)
+        else:
+            out = cns.gossip(payload, p, cfg.consensus_rounds)
+        live = out[:, -1:] > 1e-6
+        agreed = out[:, :-1] / jnp.maximum(out[:, -1:], 1e-12)
+        z_new = z + jnp.where(live, agreed - gamma * snapshot, 0.0)
+        exact = cns.exact_average(payload)
+        agreed_ex = exact[:, :-1] / jnp.maximum(exact[:, -1:], 1e-12)
+        z_ex = z + jnp.where(exact[:, -1:] > 1e-6,
+                             agreed_ex - gamma * snapshot, 0.0)
+        eps = jnp.max(jnp.linalg.norm(z_new - z_ex, axis=1))
+        return z_new, eps
+
+    def epoch(carry, t):
+        w, z, queue, snaps, clock = carry
+        key_t = jax.random.fold_in(key, t)
+        ktime, kgrad = jax.random.split(key_t)
+        times = model.per_gradient_times(ktime, n, cfg.b_max)
+        b = amb_batch_sizes(times, cfg.compute_time)
+
+        # gradients at the last *settled* iterate (staleness D), then
+        # settle the due payload (enqueued at epoch t - D)
+        g, lsum = _masked_grads(objective, w, b, cfg, kgrad, sample_args)
+        z_new, eps = settle(z, queue[0], snaps[0])
+
+        bw = b.astype(w.dtype)
+        payload = jnp.concatenate(
+            [n * bw[:, None] * (gamma * z_new + g), n * bw[:, None]],
+            axis=1)
+        queue_new = jnp.concatenate([queue[1:], payload[None]], axis=0)
+        snaps_new = jnp.concatenate([snaps[1:], z_new[None]], axis=0)
+
+        beta_next = cfg.beta(t + 1)
+        w_new = jax.vmap(
+            lambda zi: prox_step(zi, beta_next, cfg.radius))(z_new)
+
+        # per-epoch wall time: consensus gets D windows, so only T_c/D
+        # must fit alongside the compute window
+        clock_new = clock + jnp.maximum(cfg.compute_time,
+                                        cfg.comm_time / D)
+        regret_inc = jnp.sum(lsum - bw * f_star)
+        out_t = dict(
+            wall_time=clock_new, batch_sizes=b, global_batch=b.sum(),
+            eval_loss=eval_fn(w_new.mean(0)),
+            train_loss=jnp.sum(lsum) / jnp.maximum(bw.sum(), 1.0),
+            consensus_eps=eps, regret_inc=regret_inc, potential=b.sum(),
+        )
+        return (w_new, z_new, queue_new, snaps_new, clock_new), out_t
+
+    (_, _, _, _, _), tr = jax.lax.scan(
+        epoch, (w0, z0, queue0, snaps0, jnp.float32(0.0)),
         jnp.arange(1, epochs + 1))
     return History(
         wall_time=tr["wall_time"], batch_sizes=tr["batch_sizes"],

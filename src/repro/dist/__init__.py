@@ -36,6 +36,10 @@ Layered modules (bottom up):
     the staleness-1 epoch that overlaps epoch t's round-r gossip with
     epoch t+1's forward/backward (``run_amb_pipelined`` semantics), with
     a ``flush`` that settles the final in-flight consensus.
+  * :mod:`repro.dist.async_epochs` — ``make_async_gossip_train_step``:
+    AMB-DG bounded-staleness delayed-gradient epochs — a queue of D
+    in-flight consensus payloads generalizing the pipeline's hardcoded
+    staleness 1; ``flush`` drains the queue in enqueue order.
 
 The single-device simulator lives in :mod:`repro.core`; this package is
 the same math laid out on a mesh.  The uniform TrainState + epoch-driver
@@ -52,6 +56,7 @@ from .amb import (AMBConfig, gossip_primal,                  # noqa: F401
                   pack_messages, ring_gossip, seq_weights_from_b,
                   strategy_from_config, unpack_duals, worker_axes)
 from .pipeline import make_pipelined_gossip_train_step       # noqa: F401
+from .async_epochs import make_async_gossip_train_step       # noqa: F401
 
 __all__ = [
     "active_mesh", "constrain", "use_sharding", "param_spec",
@@ -59,7 +64,8 @@ __all__ = [
     "GossipConsensus", "QuantizedGossipConsensus", "make_strategy",
     "masked_metropolis", "torus_shape_for_mesh", "AMBConfig",
     "gossip_primal",
-    "make_gossip_train_step", "make_pipelined_gossip_train_step",
+    "make_async_gossip_train_step", "make_gossip_train_step",
+    "make_pipelined_gossip_train_step",
     "make_train_step", "num_workers", "pack_messages", "ring_gossip",
     "seq_weights_from_b", "strategy_from_config", "unpack_duals",
     "worker_axes",

@@ -146,6 +146,25 @@ def pack_messages(z, grads, nb: Array, n: int) -> Array:
          for zl, gl in zip(leaves, gleaves)] + [nb.reshape(n, 1)], axis=1)
 
 
+def flatten_dual(z, n: int) -> Array:
+    """(n, W) row-stack of a dual tree — :func:`pack_messages`' leaf
+    layout, without the weight column.  The single source of truth for
+    that layout, shared with :mod:`repro.dist.async_epochs`' snapshot
+    increments."""
+    return jnp.concatenate([zl.reshape(n, -1) for zl in jax.tree.leaves(z)],
+                           axis=1)
+
+
+def unflatten_dual(flat: Array, z, n: int):
+    """Invert :func:`flatten_dual` onto the structure of ``z``."""
+    leaves, treedef = jax.tree.flatten(z)
+    sizes = [int(np.prod(l.shape[1:], dtype=np.int64)) for l in leaves]
+    splits = np.cumsum(sizes)[:-1].tolist()
+    return jax.tree.unflatten(treedef, [
+        part.reshape((n,) + l.shape[1:])
+        for part, l in zip(jnp.split(flat, splits, axis=1), leaves)])
+
+
 def unpack_duals(out: Array, z, n: int):
     """Invert :func:`pack_messages` on a consensus output.
 
@@ -154,15 +173,10 @@ def unpack_duals(out: Array, z, n: int):
     epoch) keeps its dual unchanged — matching the exact path, where a
     zero gradient leaves z alone.
     """
-    leaves, treedef = jax.tree.flatten(z)
-    sizes = [int(np.prod(l.shape[1:], dtype=np.int64)) for l in leaves]
     denom = jnp.maximum(out[:, -1:], 1e-12)
-    zcat = jnp.concatenate([zl.reshape(n, -1) for zl in leaves], axis=1)
+    zcat = flatten_dual(z, n)
     zflat = jnp.where(out[:, -1:] > 1e-6, out[:, :-1] / denom, zcat)
-    splits = np.cumsum(sizes)[:-1].tolist()
-    return jax.tree.unflatten(treedef, [
-        part.reshape((n,) + l.shape[1:])
-        for part, l in zip(jnp.split(zflat, splits, axis=1), leaves)])
+    return unflatten_dual(zflat, z, n)
 
 
 # ---------------------------------------------------------------------------

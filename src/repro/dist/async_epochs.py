@@ -1,0 +1,192 @@
+"""Bounded-staleness delayed-gradient AMB epochs (AMB-DG on the mesh).
+
+:mod:`repro.dist.pipeline` overlaps exactly one consensus with the next
+epoch's compute: staleness is hardcoded to 1.  The AMB-DG follow-up work
+("Anytime Minibatch with Delayed Gradients", Al-Lawati & Draper; see
+PAPERS.md) shows the dual-averaging update tolerates *D*-epoch-stale
+gradients — so a consensus round that needs D compute windows to finish
+can still be hidden entirely, and workers never block on the barrier.
+
+This module generalizes the pipeline to a bounded-staleness FIFO of
+``D`` in-flight consensus payloads.  One step of epoch t:
+
+  1. **settle** the *due* payload — enqueued at epoch ``t - D``, its
+     consensus has had D compute windows to complete (data-independent
+     of this epoch's batch, so XLA's latency-hiding scheduler overlaps
+     its collective-permutes with the backward pass),
+  2. compute the local masked gradients at the **last settled dual**:
+     ``w_i = prox(z_i)`` where ``z_i`` reflects payloads through epoch
+     ``t - D - 1`` — delayed gradients of staleness D,
+  3. **enqueue** this epoch's payload ``n b_i (z_i(t) + g_i)`` on the
+     freshly settled dual at the tail of the queue.
+
+**The settle is an increment, not a replacement — with damped mixing.**
+The due payload was packed on the dual as of its enqueue epoch; the
+D - 1 payloads settled while it was in flight have advanced the dual
+since, so replacing the dual with the agreed value would split it into
+D interleaved chains, each accumulating only every D-th gradient —
+measurably divergent for D >= 2.  Instead, the payload of epoch t
+carries a *mixing-damped* dual term,
+
+    payload_i = n b_i (gamma z_i + g_i),    gamma = 1 / (2 D),
+
+each queue slot keeps a snapshot of the dual it was packed on, and
+settling applies the increment
+
+    z_i  <-  z_i + (agreed_i - gamma snapshot_i)
+          =  z_i + g_bar_w + gamma (z_bar_w - z_i)      (exact limit)
+
+— the full-strength eq.-6 weighted-mean gradient plus a gamma-damped
+pull toward the consensus dual.  The damping is what makes deep
+staleness stable: a D-epoch-delayed contraction at full strength obeys
+``x_t = x_{t-1} - (1 - lambda) x_{t-D}`` per gossip eigenmode, whose
+roots leave the unit circle for D >= 2; damping by gamma <= 1/(2D)
+keeps every mode strictly stable while the *mean* dual — what
+:func:`repro.dist.amb.gossip_primal` checkpoints — still advances by
+exactly the weighted-mean gradient per settle.  At ``staleness=1``
+gamma = 1, the payload is the sequential ``n b_i (z_i + g_i)`` wire
+format verbatim, and the settle takes the plain replacement path — the
+very same :func:`repro.dist.amb.unpack_duals` graph as
+:func:`repro.dist.pipeline.make_pipelined_gossip_train_step` — so
+flush results are bit-for-bit equal to the pipelined protocol: the
+correctness anchor ``tests/test_async.py`` asserts.
+
+``flush`` settles the whole queue in enqueue order (no new compute) —
+after a flush the state holds the dual through every enqueued payload.
+The quantize key of each payload is derived from its *enqueue* epoch,
+so an async chain settles every payload with exactly the key the
+sequential (and staleness-1 pipelined) chain would have used,
+regardless of when the settle happens.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .amb import (AMBConfig, _init_gossip_state, _local_grads, flatten_dual,
+                  num_workers, pack_messages, strategy_from_config,
+                  unflatten_dual, unpack_duals, worker_axes)
+from .pipeline import _msg_width
+
+Array = jax.Array
+
+
+def make_async_gossip_train_step(cfg, mesh, amb: AMBConfig,
+                                 staleness: int = 1):
+    """Returns (init_state, step, flush) for bounded-staleness AMB-DG.
+
+    State extends the sequential gossip state with ``queue`` — a length-
+    ``staleness`` tuple of (n, W+1) consensus payloads, oldest first —
+    and, for ``staleness > 1``, ``snaps`` — the matching (n, W) dual
+    snapshots each payload was packed on (slot j of a state at epoch t
+    was enqueued at epoch ``t - staleness + j``).  step(state, batch, b)
+    -> (state, metrics); flush(state) -> state settles the whole queue
+    in enqueue order (no gradients).
+
+    Epoch t's gradients are evaluated at the staleness-D primal (dual
+    through epoch t - D - 1) and each settle applies the increment
+    ``agreed - gamma * snapshot`` (see module docstring) — collapsing
+    to the plain :mod:`repro.dist.pipeline` replacement at
+    ``staleness=1``.
+    """
+    if staleness < 1:
+        raise ValueError(f"staleness must be >= 1, got {staleness}")
+    n = num_workers(mesh)
+    waxes = worker_axes(mesh)
+    beta, radius = amb.beta, amb.radius
+    strategy = strategy_from_config(amb, mesh)
+    qkey = jax.random.PRNGKey(amb.seed)
+    D = staleness
+    gamma = 1.0 if D == 1 else 1.0 / (2.0 * D)   # delayed-mixing damping
+
+    def _wshard():
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        return NamedSharding(mesh, P(waxes if n > 1 else None))
+
+    def init_state(params):
+        state = _init_gossip_state(params, mesh, n, waxes)
+        w = _msg_width(params)
+        zero = lambda width: jax.device_put(
+            jnp.zeros((n, width), jnp.float32), _wshard())
+        state["queue"] = tuple(zero(w) for _ in range(D))
+        if D > 1:
+            state["snaps"] = tuple(zero(w - 1) for _ in range(D))
+        return state
+
+    def _settle(z, payload, snapshot, enqueue_epoch):
+        """One queued payload's consensus folded into the dual.
+
+        A zero payload (pre-fill slots of the first D-1 epochs, or a
+        flushed queue) carries a zero normaliser column; the guard turns
+        it into a no-op in both branches.
+        """
+        out = strategy.combine(payload,
+                               key=jax.random.fold_in(qkey, enqueue_epoch))
+        if D == 1:
+            # at D = 1 gamma = 1 and no settle intervenes between
+            # enqueue and settle, so the increment equals the plain
+            # replacement; taking unpack_duals keeps the exact
+            # pipelined-settle graph (the bit-parity anchor)
+            return unpack_duals(out, z, n)
+        denom = jnp.maximum(out[:, -1:], 1e-12)
+        delta = jnp.where(out[:, -1:] > 1e-6,
+                          out[:, :-1] / denom - gamma * snapshot, 0.0)
+        return unflatten_dual(flatten_dual(z, n) + delta, z, n)
+
+    def step(state, batch, b):
+        gb = jax.tree.leaves(batch)[0].shape[0]
+        per = gb // n
+        t = state["t"]
+        beta_t = beta(t.astype(jnp.float32) + 1.0)
+
+        # (1) settle the due payload, enqueued at epoch t - D — no data
+        # dependency on (2), so its collective-permutes overlap the
+        # backward pass.
+        snap0 = state["snaps"][0] if D > 1 else None
+        z_new = _settle(state["z"], state["queue"][0], snap0, t - D)
+
+        # (2) fwd/bwd at the last settled primal prox(z) — staleness D.
+        grads, losses = _local_grads(cfg, state, batch, b, beta_t, radius,
+                                     n, per)
+
+        # (3) enqueue this epoch's payload on the freshly settled dual
+        # (gamma-damped dual term; gamma = 1 reproduces the sequential
+        # wire format at D = 1).
+        bw = jnp.minimum(b, per).astype(jnp.float32)
+        z_pack = z_new if D == 1 else jax.tree.map(lambda zl: gamma * zl,
+                                                   z_new)
+        pending = pack_messages(z_pack, grads, n * bw, n)
+
+        bsum = jnp.maximum(bw.sum(), 1.0)
+        metrics = {"loss": jnp.sum(bw * losses) / bsum,
+                   "global_batch": bw.sum(),
+                   "beta": beta(t.astype(jnp.float32) + 2.0)}
+        new_state = {"z": z_new, "w0": state["w0"], "t": t + 1,
+                     "queue": state["queue"][1:] + (pending,)}
+        if D > 1:
+            new_state["snaps"] = state["snaps"][1:] + (
+                flatten_dual(z_new, n),)
+        return new_state, metrics
+
+    def flush(state):
+        """Settle every in-flight payload, oldest first; clears the queue.
+
+        ``t`` is NOT advanced: after k steps + flush the state holds the
+        dual through payload k — exactly the sequential chain's state at
+        t = k — so downstream beta(t)-dependent consumers
+        (:func:`repro.dist.amb.gossip_primal` checkpoints) agree.  Each
+        slot settles under its own enqueue-epoch key; a partially warm
+        queue (fewer than D steps taken) is handled by the zero-payload
+        no-op guard, not by special cases.
+        """
+        z = state["z"]
+        for j in range(D):
+            snap = state["snaps"][j] if D > 1 else None
+            z = _settle(z, state["queue"][j], snap, state["t"] - D + j)
+        out = {"z": z, "w0": state["w0"], "t": state["t"],
+               "queue": tuple(jnp.zeros_like(q) for q in state["queue"])}
+        if D > 1:
+            out["snaps"] = tuple(jnp.zeros_like(s) for s in state["snaps"])
+        return out
+
+    return init_state, step, flush

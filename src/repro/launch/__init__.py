@@ -1,0 +1,12 @@
+"""Launchers — thin CLI adapters over :class:`repro.api.AMBSession`.
+
+  * :mod:`repro.launch.train` — AMB/FMB training (``--restore`` resumes
+    a saved session; ``--async --staleness D`` selects the AMB-DG
+    bounded-staleness epoch driver).
+  * :mod:`repro.launch.serve` — decode from a session (``--finetune``
+    shares it with training).
+  * :mod:`repro.launch.dryrun` — lower/compile cost model on abstract
+    inputs (no execution).
+  * :mod:`repro.launch.mesh` — host/production mesh construction.
+  * :mod:`repro.launch.specs` — abstract input/param specs for dryrun.
+"""

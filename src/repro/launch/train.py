@@ -8,11 +8,14 @@ simulated clock — see :mod:`repro.api.clock`), the consensus strategy and
 the epoch driver.  This driver only streams batches, logs metrics, and
 checkpoints.
 
-Example (8 simulated devices, reduced qwen2, pipelined torus gossip):
+Example (8 simulated devices, reduced qwen2, async torus gossip with two
+in-flight consensus payloads):
   XLA_FLAGS=--xla_force_host_platform_device_count=8 \
   PYTHONPATH=src python -m repro.launch.train --arch qwen2-1.5b --smoke \
       --steps 50 --data 4 --model 2 --consensus gossip --graph torus \
-      --pipeline
+      --async --staleness 2
+(``--pipeline`` is the staleness-1 special case; ``--restore DIR``
+resumes a saved session.)
 """
 from __future__ import annotations
 
@@ -30,15 +33,23 @@ def main(argv=None):
     ConsensusSpec.add_cli_args(ap)
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--restore", default=None, metavar="DIR",
+                    help="resume from an AMBSession.save directory "
+                         "(params, opt/dual state, and step counter; the "
+                         "saved specs override the spec flags)")
     ap.add_argument("--metrics", default=None)
     args = ap.parse_args(argv)
 
-    train = TrainSpec.from_args(args)
     try:
-        session = AMBSession(train, ClockSpec.from_args(args),
-                             ConsensusSpec.from_args(args))
+        if args.restore:
+            session = AMBSession.restore(args.restore)
+        else:
+            session = AMBSession(TrainSpec.from_args(args),
+                                 ClockSpec.from_args(args),
+                                 ConsensusSpec.from_args(args))
     except ValueError as e:
         raise SystemExit(str(e))
+    train = session.train
 
     stream = LMTokenStream(vocab_size=session.cfg.vocab_size,
                            seq_len=train.seq_len, seed=train.seed)
@@ -46,13 +57,17 @@ def main(argv=None):
         args.metrics or f"artifacts/train_{train.arch}_{train.mode}.jsonl")
 
     loss = None          # a zero-step run is a well-defined no-op
-    for step in range(args.steps):
+    # absolute step indices (the session's own counter): a restored run
+    # continues both the data order and the logged step axis where the
+    # saved one stopped instead of re-emitting steps 0..N
+    start = session.steps_done
+    for step in range(start, start + args.steps):
         m = session.step(stream.batch(0, step, session.global_batch))
         loss = m["loss"]
         logger.log(step, loss=loss, global_batch=m["global_batch"],
                    sim_wall_s=m["sim_wall_s"], step_s=m["step_s"],
                    budget_s=m["budget_s"])
-        if step % 10 == 0 or step == args.steps - 1:
+        if step % 10 == 0 or step == start + args.steps - 1:
             print(f"step {step:4d} loss {loss:.4f} "
                   f"b(t)={m['global_batch']:.0f} "
                   f"T={m['budget_s']:.3f}s "
