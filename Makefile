@@ -1,15 +1,18 @@
 # Repro convenience targets.  `make verify` is the tier-1 gate.
 
-.PHONY: verify verify-fast smoke docs-check bench-dist
+.PHONY: verify verify-fast smoke controller-smoke docs-check bench-dist
 
-verify:               # docs check + API smoke + full pytest suite
+verify:               # docs check + smokes + full pytest suite
 	scripts/verify.sh
 
-verify-fast:          # fast lane: docs + smoke + pytest -m 'not slow'
+verify-fast:          # fast lane: docs + smokes + pytest -m 'not slow'
 	scripts/verify.sh --fast
 
 smoke:                # just the programmatic-API smoke example
 	JAX_PLATFORMS=cpu PYTHONPATH=src python -m examples.api_session --smoke
+
+controller-smoke:     # the online-controller end-to-end CI smoke
+	JAX_PLATFORMS=cpu python scripts/controller_smoke.py
 
 docs-check:           # README/docs references must match the code
 	python scripts/check_docs.py

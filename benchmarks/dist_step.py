@@ -25,7 +25,12 @@ host-device mesh (forced device count, CPU-friendly smoke config):
   * the ``dist_async`` section: simulated epoch wall time vs staleness D
     for the AMB-DG async driver against the sequential and pipelined
     schedules, under the paper's straggler clock with a long consensus
-    window (T_c > T) — the regime bounded staleness reclaims.
+    window (T_c > T) — the regime bounded staleness reclaims,
+  * the ``dist_controller`` section: the online self-tuning controller
+    (``--controller``; :mod:`repro.control`) vs static (D, budget)
+    settings under a *shifting* straggler clock — the per-gradient rate
+    jumps 3x mid-run, the statics keep their launch tuning, the
+    controller re-solves Lemma 6 and retunes D from telemetry.
 
 Writes ``artifacts/bench/BENCH_dist.json`` and prints the
 ``name,us_per_call,derived`` CSV rows (benchmarks/run.py conventions).
@@ -264,6 +269,111 @@ def bench_async(arch: str, steps: int, seq_len: int,
     return out
 
 
+def bench_controller(arch: str, steps: int, seq_len: int,
+                     comm_time: float = 4.0,
+                     static_ds=(1, 2, 4)) -> dict:
+    """Self-tuning controller vs static (D, budget) under a shifting clock.
+
+    The scenario static tuning cannot win: the cluster's per-gradient
+    rate *changes mid-run* (epoch ``switch``: every worker gets ~3x
+    faster — a contention burst ending, a thermal cap lifting).  Every
+    run uses the async driver and the same deliberately long consensus
+    window T_c; the static baselines keep the budget T0 (the Lemma-6
+    solve for the *initial* rate) and a fixed staleness D for the whole
+    run, while the controller starts from exactly (T0, D=1) and retunes
+    from telemetry: after the shift it cuts T toward the new Lemma-6
+    solve (rate-limited, so over a few decisions) and raises D as the
+    measured ``T_c / T`` ratio climbs — keeping epochs compute-bound at
+    the *new* rate.  Per-epoch simulated wall is ``max(T, T_c / D)``
+    (see :func:`bench_async`), so a static run pays ``T0`` forever while
+    the controller converges to ``~max(T_new, T_c / D_new)``.
+
+    Reports total simulated wall and final loss per config, plus the
+    two acceptance booleans: controller wall <= best static wall, and
+    controller loss no worse (5% tolerance) than that best-wall static
+    run's.
+    """
+    from repro.api import (AMBSession, ClockSpec, ConsensusSpec,
+                           ControllerSpec, TrainSpec)
+    from repro.api.clock import SimulatedClock
+    from repro.core.stragglers import ShiftedExponential
+
+    epochs = max(3 * steps, 12)
+    switch = epochs // 3            # shift early: 2/3 of the run is "after"
+    train = TrainSpec(arch=arch, smoke=True, seq_len=seq_len,
+                      batch_per_worker=2, data=4, model=2)
+    n, bpw = 4, train.batch_per_worker
+    slow = ShiftedExponential(lam=2.0 / 3.0, zeta=1.0, b_ref=bpw)
+    fast = ShiftedExponential(lam=2.0, zeta=1.0 / 3.0, b_ref=bpw)  # 3x
+    t0_budget = (1.0 + n / (n * bpw)) * slow.mean_batch_time()  # Lemma 6
+
+    class _ShiftingClock(SimulatedClock):
+        """Simulated clock whose straggler model swaps mid-run."""
+
+        def __init__(self):
+            SimulatedClock.__init__(self, slow, n, bpw,
+                                    compute_time=t0_budget)
+            self._epoch = 0
+
+        def epoch(self, key):
+            self.model = slow if self._epoch < switch else fast
+            self._epoch += 1
+            return (self.model.per_gradient_times(key, self.n, self.bpw),
+                    self.budget_t)
+
+    clock_spec = ClockSpec(kind="simulated", comm_time=comm_time,
+                           compute_time=t0_budget)
+    out: dict = {"arch": arch, "mesh": "4x2", "epochs": epochs,
+                 "switch_epoch": switch, "comm_time_s": comm_time,
+                 "budget_T0_s": t0_budget,
+                 "note": "per-gradient rate shifts 3x faster at "
+                         "switch_epoch; statics keep (T0, D) throughout, "
+                         "controller retunes from telemetry"}
+
+    def drive(label: str, staleness: int, controller: bool):
+        ctl = ControllerSpec(enabled=True, interval=2, warmup=2) \
+            if controller else None
+        session = AMBSession(
+            train, clock_spec,
+            ConsensusSpec(consensus="gossip", gossip_rounds=4,
+                          async_epochs=True, staleness=staleness),
+            ctl)
+        session.clock = _ShiftingClock()     # same draws for every config
+        stream = LMTokenStream(vocab_size=session.cfg.vocab_size,
+                               seq_len=seq_len, seed=0)
+        decisions = []
+        for i in range(epochs):
+            m = session.step(stream.batch(0, i, session.global_batch))
+            if "action" in m:
+                decisions.append({"epoch": i, **{
+                    k: m["action"][k] for k in ("budget", "staleness",
+                                                "reason")
+                    if m["action"][k] is not None}})
+        session.flush()
+        out[label] = {"sim_wall_total_s": session.sim_wall,
+                      "sim_wall_per_epoch_s": session.sim_wall / epochs,
+                      "final_budget_T_s": m["budget_s"],
+                      "final_staleness": m["staleness"],
+                      "final_loss": m["loss"]}
+        if controller:
+            out[label]["decisions"] = decisions
+
+    for d in static_ds:
+        drive(f"static_D{d}", staleness=d, controller=False)
+    drive("controller", staleness=1, controller=True)
+
+    best = min((f"static_D{d}" for d in static_ds),
+               key=lambda k: out[k]["sim_wall_total_s"])
+    out["best_static"] = best
+    out["controller_beats_best_static_wall"] = bool(
+        out["controller"]["sim_wall_total_s"]
+        <= out[best]["sim_wall_total_s"] * 1.001)
+    out["loss_no_worse"] = bool(
+        out["controller"]["final_loss"]
+        <= out[best]["final_loss"] * 1.05)
+    return out
+
+
 _MULTIPOD_VARIANTS = (("gossip", "torus"), ("gossip_q8", "torus"),
                       ("gossip_q4", "torus"), ("gossip", "ring"))
 
@@ -413,6 +523,8 @@ def main(argv=None) -> dict:
                                        args.seq_len),
         },
         "dist_async": bench_async(args.arch, args.steps, args.seq_len),
+        "dist_controller": bench_controller(args.arch, args.steps,
+                                            args.seq_len),
     }
     if not args.skip_multipod:
         rec["dist_pipelined"]["multipod_2x16x16"] = bench_multipod(
@@ -438,6 +550,14 @@ def main(argv=None) -> dict:
             continue
         print(f"dist_async_{label},{row['sim_epoch_wall_s'] * 1e6:.0f},"
               f"{seq_wall / row['sim_epoch_wall_s']:.3f}")
+    ctl = rec["dist_controller"]
+    best_wall = ctl[ctl["best_static"]]["sim_wall_per_epoch_s"]
+    for label, row in ctl.items():
+        if not (isinstance(row, dict) and "sim_wall_per_epoch_s" in row):
+            continue
+        print(f"dist_controller_{label},"
+              f"{row['sim_wall_per_epoch_s'] * 1e6:.0f},"
+              f"{best_wall / row['sim_wall_per_epoch_s']:.3f}")
     print(f"[ok] wrote {outdir / 'BENCH_dist.json'}")
     return rec
 

@@ -36,6 +36,11 @@ if [[ "$smoke" == 1 ]]; then
   # via XLA_FLAGS, so this behaves identically with or without
   # accelerators attached
   python -m examples.api_session --smoke
+
+  # controller smoke (fast lane too): a short --controller run on forced
+  # host devices must emit at least one non-trivial ControlAction
+  echo "== controller smoke: python scripts/controller_smoke.py =="
+  python scripts/controller_smoke.py
 fi
 
 echo "== pytest ${pytest_args[*]:-} =="

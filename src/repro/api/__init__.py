@@ -17,6 +17,11 @@ one session object:
   * :class:`AMBSession` (:mod:`repro.api.session`) — mesh + params +
     clock + protocol behind ``step`` / ``flush`` / ``save`` / ``params``,
     with elastic worker membership via ``set_active``.
+  * :class:`ControllerSpec` (:mod:`repro.api.specs`) — opt-in online
+    self-tuning: the session feeds per-epoch telemetry to a
+    :class:`repro.control.Controller`, which retunes the budget T
+    (online Lemma 6), the async staleness D with its damping gamma, and
+    the effective batch target, applied mid-run without restart.
 
 ``launch/train.py``, ``launch/serve.py``, ``launch/dryrun.py`` and
 ``benchmarks/dist_step.py`` are thin adapters over this package; see
@@ -27,11 +32,12 @@ from .protocol import (AsyncProtocol, ExactProtocol,                 # noqa: F40
                        GossipProtocol, PipelinedProtocol, TrainProtocol,
                        build_protocol)
 from .session import AMBSession                                      # noqa: F401
-from .specs import ClockSpec, ConsensusSpec, TrainSpec               # noqa: F401
+from .specs import (ClockSpec, ConsensusSpec, ControllerSpec,        # noqa: F401
+                    TrainSpec)
 
 __all__ = [
     "AMBSession", "AsyncProtocol", "Clock", "ClockSpec", "ConsensusSpec",
-    "ExactProtocol", "GossipProtocol", "MeasuredClock",
+    "ControllerSpec", "ExactProtocol", "GossipProtocol", "MeasuredClock",
     "PipelinedProtocol", "SimulatedClock", "TrainProtocol", "TrainSpec",
     "build_protocol", "make_clock",
 ]

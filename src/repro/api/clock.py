@@ -46,6 +46,10 @@ class Clock:
     def update(self, step_seconds: float, global_b: float) -> None:
         pass
 
+    def set_budget(self, budget: float) -> None:
+        """Pin the compute budget T (controller actuation point)."""
+        raise NotImplementedError
+
 
 class SimulatedClock(Clock):
     """Paper-evaluation clock: model times, Lemma-6 (or explicit) T."""
@@ -65,6 +69,9 @@ class SimulatedClock(Clock):
     def epoch(self, key: Array) -> Tuple[Array, float]:
         return self.model.per_gradient_times(key, self.n, self.bpw), \
             self.budget_t
+
+    def set_budget(self, budget: float) -> None:
+        self.budget_t = float(budget)
 
 
 class MeasuredClock(Clock):
@@ -118,6 +125,11 @@ class MeasuredClock(Clock):
         budget = self.budget() if self.compute_time is None \
             else self.compute_time
         return self.times(key), budget
+
+    def set_budget(self, budget: float) -> None:
+        # pinning disables the clock's own Lemma-6 re-derivation — when a
+        # controller drives the budget, the controller is the tracker
+        self.compute_time = float(budget)
 
 
 def make_clock(spec: ClockSpec, n: int, batch_per_worker: int) -> Clock:

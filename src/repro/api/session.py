@@ -38,17 +38,19 @@ import numpy as np
 
 from ..ckpt import load_checkpoint, save_checkpoint
 from ..configs import get_config, smoke_config
+from ..control import Controller, EpochRecord
 from ..core.stragglers import amb_batch_sizes, fmb_finish_times
 from ..data import shard_batch
 from ..dist import use_sharding
 from ..dist.amb import num_workers
 from ..dist.params import tree_shardings
 from ..launch.mesh import make_host_mesh
+from ..metrics import MetricsLogger
 from ..models import init_params
 from ..optim import make_optimizer
 from .clock import make_clock
 from .protocol import build_protocol
-from .specs import ClockSpec, ConsensusSpec, TrainSpec
+from .specs import ClockSpec, ConsensusSpec, ControllerSpec, TrainSpec
 
 Array = jax.Array
 
@@ -66,6 +68,15 @@ class AMBSession:
         initializes from ``train.seed`` and shards per the layout rules.
       cfg: an explicit :class:`repro.models.common.ArchConfig`, for
         custom architectures outside the registry (tests, research).
+      controller: a :class:`repro.api.specs.ControllerSpec`; when
+        ``enabled``, every ``step`` feeds a telemetry record to a
+        :class:`repro.control.Controller` and applies its actions
+        in-place — budget into the :class:`~repro.api.clock.Clock`,
+        staleness by drain-and-rebuild (:meth:`_apply_staleness`) — no
+        restart, no recompile beyond the new driver graph.
+      metrics_path: optional JSONL path; when set, every epoch (and
+        every controller decision) is appended via
+        :class:`repro.metrics.MetricsLogger`.
 
     A zero-step session is a well-defined no-op: construction alone
     yields valid ``params`` (the initialization), ``flush`` and ``save``
@@ -74,8 +85,9 @@ class AMBSession:
 
     def __init__(self, train: TrainSpec,
                  clock: Optional[ClockSpec] = None,
-                 consensus: Optional[ConsensusSpec] = None, *,
-                 mesh=None, params=None, cfg=None):
+                 consensus: Optional[ConsensusSpec] = None,
+                 controller: Optional[ControllerSpec] = None, *,
+                 mesh=None, params=None, cfg=None, metrics_path=None):
         self.train = train
         self.clock_spec = clock if clock is not None else ClockSpec()
         self.consensus_spec = consensus if consensus is not None \
@@ -108,9 +120,22 @@ class AMBSession:
                              "paper's dual-averaging protocol; use "
                              "optimizer='dual_averaging'")
 
+        self.controller_spec = controller if controller is not None \
+            else ControllerSpec()
+        self.controller: Optional[Controller] = None
+        if self.controller_spec.enabled:
+            self.controller = Controller(
+                self.controller_spec, n_workers=self.n_workers,
+                comm_time=self.clock_spec.comm_time,
+                b_target=self.global_batch, b_cap=self.global_batch,
+                staleness=self.consensus_spec.staleness,
+                async_mode=self.consensus_spec.async_epochs)
+        self.metrics = MetricsLogger(metrics_path) if metrics_path \
+            else None
+
         self._key = jax.random.PRNGKey(train.seed)
         self._active: Optional[tuple] = None
-        self._protocols: dict = {}       # active mask -> built protocol
+        self._protocols: dict = {}       # (mask, staleness) -> protocol
         self._build_protocol()
 
         with use_sharding(self.mesh):
@@ -126,18 +151,24 @@ class AMBSession:
     # -- construction ------------------------------------------------------
 
     def _build_protocol(self, active: Optional[tuple] = None) -> None:
-        """(Re)build the epoch driver; called at init and on set_active.
+        """(Re)build the epoch driver; at init, on set_active, and on a
+        controller staleness retune.
 
         Exact consensus ignores ``active`` at the step level (a masked
         worker's b_i = 0 already zeroes it out of the eq.-6 average), so
-        only the gossip-family protocols rebuild — and rebuilds are cached
-        by mask, so a worker rejoining a previously-seen configuration
-        reuses the warm jitted executable instead of recompiling.
+        only the gossip-family protocols rebuild — and rebuilds are
+        cached by ``(mask, staleness)``, so a worker rejoining a
+        previously-seen configuration — or the controller swinging D
+        back to an earlier value — reuses the warm jitted executable
+        instead of recompiling.
         """
-        key = active if self._decentralized else None
+        mask = active if self._decentralized else None
+        key = (mask, self.consensus_spec.staleness) \
+            if self._decentralized else None
         if key not in self._protocols:
             amb = self.consensus_spec.to_amb_config(
-                self.global_batch, self.train.seed, active=key)
+                self.global_batch, self.train.seed, active=mask,
+                noise_stats=self.controller is not None)
             proto = build_protocol(
                 self.cfg, self.mesh, amb, optimizer=self._optimizer,
                 pipeline=self.consensus_spec.pipeline,
@@ -244,17 +275,100 @@ class AMBSession:
             step_s = time.time() - t0
             self.clock.update(step_s, float(m["global_batch"]))
             self.steps_done += 1
-            return {"loss": loss,
-                    "global_batch": float(m["global_batch"]),
-                    "budget_s": float(budget),
-                    "step_s": step_s,
-                    "sim_wall_s": self.sim_wall,
-                    "b": np.asarray(b)}
+            out = {"loss": loss,
+                   "global_batch": float(m["global_batch"]),
+                   "budget_s": float(budget),
+                   "step_s": step_s,
+                   "sim_wall_s": self.sim_wall,
+                   "staleness": self.consensus_spec.staleness,
+                   "b": np.asarray(b)}
+            if self.controller is not None:
+                action = self._control(m, out, b, times)
+                if action is not None:
+                    out["action"] = action.to_dict()
+            if self.metrics is not None:
+                self.metrics.log(self.steps_done,
+                                 **{k: v for k, v in out.items()
+                                    if k != "b"})
+            return out
+
+    def _control(self, m: dict, out: dict, b: Array, times: Array):
+        """Feed the epoch to the controller; apply any action in-place."""
+        # measured mean per-gradient seconds, from the time each node
+        # *actually spent* on the gradients it finished — exact even when
+        # b_i saturates the data cap and the node idles out the window
+        # (the naive T / b_i would over-bill those nodes and turn the
+        # Lemma-6 re-solve into a positive feedback loop)
+        tnp, bnp = np.asarray(times), np.asarray(b)
+        eff = np.minimum(bnp, tnp.shape[1])
+        done = eff >= 1
+        tau_s = None
+        if done.any():
+            elapsed = np.cumsum(tnp, axis=1)[np.arange(tnp.shape[0]),
+                                             np.maximum(eff, 1) - 1]
+            tau_s = float(np.mean(elapsed[done] / eff[done]))
+        rec = EpochRecord(
+            t=self.steps_done, budget_s=out["budget_s"],
+            comm_time_s=self.clock_spec.comm_time, step_s=out["step_s"],
+            loss=out["loss"], b=bnp, tau_s=tau_s,
+            global_batch=out["global_batch"],
+            staleness=self.consensus_spec.staleness
+            if self.consensus_spec.async_epochs else 1,
+            grad_sq_norm=(float(m["grad_sq_norm"])
+                          if "grad_sq_norm" in m else None),
+            grad_var=float(m["grad_var"]) if "grad_var" in m else None)
+        action = self.controller.observe(rec)
+        if action is None:
+            return None
+        if action.budget is not None:
+            self.clock.set_budget(action.budget)
+        if action.staleness is not None:
+            self._apply_staleness(action.staleness)
+        # a b_target move needs no actuation here: it feeds the next
+        # Lemma-6 re-solve, so the batch is driven through the deadline T
+        return action
 
     def flush(self) -> None:
         """Settle in-flight consensus (pipelined mode); no-op otherwise."""
         with use_sharding(self.mesh):
             self.state = self._flush_fn(self.state)
+
+    def _apply_staleness(self, staleness: int) -> None:
+        """Retune the async driver's D mid-run: drain, rebuild, migrate.
+
+        The in-flight queue is **drained first** (a plain ``flush``, the
+        same move :meth:`set_active` makes): every queued payload was
+        packed with the *old* D's damping gamma and must settle under
+        the operator it was enqueued against.  The new driver then
+        starts from an empty queue — the settled dual ``z`` and the
+        epoch counter ``t`` carry over, the ``staleness``-shaped queue
+        (and snapshot) leaves are re-initialized to the flushed-empty
+        zeros.  Rebuilds go through the same ``(mask, staleness)``
+        protocol cache as :meth:`set_active`, so revisiting a D reuses
+        the warm executable.
+        """
+        if staleness == self.consensus_spec.staleness:
+            return
+        if not self.consensus_spec.async_epochs:
+            raise ValueError("staleness is the async driver's knob; this "
+                             "session runs "
+                             f"{self.protocol.mode!r}")
+        self.flush()    # settle the queue under the D it was packed for
+        self.consensus_spec = self.consensus_spec.replace(
+            staleness=int(staleness))
+        self._build_protocol(self._active)
+        with use_sharding(self.mesh):
+            fresh = self.protocol.init(self.state["w0"])
+            fresh["z"] = self.state["z"]
+            fresh["w0"] = self.state["w0"]
+            fresh["t"] = self.state["t"]
+            self.state = fresh
+
+    def close(self) -> None:
+        """Release the metrics logger (idempotent)."""
+        if self.metrics is not None:
+            self.metrics.close()
+            self.metrics = None
 
     # -- the iterate -------------------------------------------------------
 
@@ -291,9 +405,19 @@ class AMBSession:
             "sim_wall_s": self.sim_wall,
             "train": self.train.to_dict(),
             "clock": self.clock_spec.to_dict(),
+            # NB: consensus_spec reflects the *current* staleness (the
+            # controller may have retuned D), so a restore rebuilds the
+            # driver whose queue shapes match the checkpointed state
             "consensus": self.consensus_spec.to_dict(),
             "active": None if self._active is None else list(self._active),
             "sec_per_grad": getattr(self.clock, "sec_per_grad", None),
+            # the budget actually in force (controller actions pin it)
+            "clock_budget": getattr(
+                self.clock, "budget_t",
+                getattr(self.clock, "compute_time", None)),
+            "controller": None if self.controller is None else {
+                "spec": self.controller_spec.to_dict(),
+                "state": self.controller.to_state()},
         }
         blob = json.dumps(meta, sort_keys=True, indent=1)
         # per-step copy first: counters/mask must match the state they
@@ -304,7 +428,7 @@ class AMBSession:
 
     @classmethod
     def restore(cls, directory, *, step: Optional[int] = None, mesh=None,
-                cfg=None) -> "AMBSession":
+                cfg=None, metrics_path=None) -> "AMBSession":
         """Rebuild a session from a :meth:`save` directory, resuming exactly.
 
         Recovers the spec triple from ``session.json``, then the full
@@ -329,10 +453,13 @@ class AMBSession:
                     / "session.json")
         if per_step.exists():
             meta = json.loads(per_step.read_text())
+        ctl = meta.get("controller")
         session = cls(TrainSpec.from_dict(meta["train"]),
                       ClockSpec.from_dict(meta["clock"]),
                       ConsensusSpec.from_dict(meta["consensus"]),
-                      mesh=mesh, cfg=cfg)
+                      None if ctl is None
+                      else ControllerSpec.from_dict(ctl["spec"]),
+                      mesh=mesh, cfg=cfg, metrics_path=metrics_path)
         if meta.get("active") is not None:
             session.set_active(meta["active"])   # before the state lands:
             # the drain-on-change flush must not touch the restored queue
@@ -355,4 +482,11 @@ class AMBSession:
         if meta.get("sec_per_grad") is not None \
                 and hasattr(session.clock, "sec_per_grad"):
             session.clock.sec_per_grad = float(meta["sec_per_grad"])
+        if meta.get("clock_budget") is not None:
+            # re-pin the budget that was in force (a controller may have
+            # moved it off the spec-derived value); for an unpinned
+            # measured clock this key is None and re-derivation survives
+            session.clock.set_budget(float(meta["clock_budget"]))
+        if ctl is not None and session.controller is not None:
+            session.controller.load_state(ctl["state"])
         return session

@@ -161,13 +161,16 @@ class ClockSpec(_Spec):
                         default=ClockSpec.comm_time)
         ap.add_argument("--straggler", default=ClockSpec.straggler,
                         choices=list(STRAGGLER_MODELS))
+        ap.add_argument("--clock-ema", type=float, default=ClockSpec.ema,
+                        help="measured-clock EMA smoothing factor")
 
     @classmethod
     def from_args(cls, args: argparse.Namespace) -> "ClockSpec":
         kind = "simulated" if getattr(args, "sim_clock", False) \
             else args.clock
         return cls(kind=kind, compute_time=args.compute_time,
-                   comm_time=args.comm_time, straggler=args.straggler)
+                   comm_time=args.comm_time, straggler=args.straggler,
+                   ema=getattr(args, "clock_ema", ClockSpec.ema))
 
 
 # ---------------------------------------------------------------------------
@@ -202,14 +205,15 @@ class ConsensusSpec(_Spec):
         return BetaSchedule(k=self.beta_k, mu=mu, scale=self.beta_scale)
 
     def to_amb_config(self, global_batch: int, seed: int = 0,
-                      active: Optional[tuple] = None):
+                      active: Optional[tuple] = None,
+                      noise_stats: bool = False):
         """The dist-layer :class:`repro.dist.amb.AMBConfig` equivalent."""
         from ..dist.amb import AMBConfig
         return AMBConfig(consensus=self.consensus,
                          gossip_rounds=self.gossip_rounds, graph=self.graph,
                          torus_shape=self.torus_shape, lazy=self.lazy,
                          beta=self.beta(global_batch), radius=self.radius,
-                         seed=seed, active=active)
+                         seed=seed, active=active, noise_stats=noise_stats)
 
     @staticmethod
     def add_cli_args(ap: argparse.ArgumentParser) -> None:
@@ -246,3 +250,60 @@ class ConsensusSpec(_Spec):
                    pipeline=args.pipeline,
                    async_epochs=args.async_epochs,
                    staleness=args.staleness)
+
+
+# ---------------------------------------------------------------------------
+# ControllerSpec
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ControllerSpec(_Spec):
+    """Online self-tuning of budget T, staleness D, and batch target b.
+
+    When ``enabled``, :class:`repro.api.AMBSession` feeds each epoch's
+    telemetry (measured per-gradient rates, consensus/compute ratio,
+    gradient-noise scale) into a :class:`repro.control.Controller`, which
+    re-solves the Lemma-6 budget, retunes the AMB-DG staleness bound
+    ``D`` (and its damping ``gamma = 1/(2D)``), and grows the effective
+    per-worker minibatch target as gradient noise shrinks.  Decisions are
+    rate-limited (``max_step``), deadbanded (``deadband``), hysteretic
+    (``hysteresis``), and only issued every ``interval`` epochs after
+    ``warmup`` epochs of pure observation.
+    """
+
+    enabled: bool = False
+    interval: int = 5                 # epochs between decisions
+    warmup: int = 5                   # observe-only epochs before deciding
+    ema: float = 0.8                  # telemetry EMA smoothing
+    budget: bool = True               # retune T (Lemma 6, online)
+    staleness: bool = True            # retune D / gamma (AMB-DG, async only)
+    batch: bool = True                # grow b target with the noise scale
+    d_max: int = 8                    # staleness ceiling
+    hysteresis: float = 0.25          # D-change hysteresis (in T_c/T units)
+    deadband: float = 0.1             # min relative budget change to act
+    max_step: float = 2.0             # max budget change factor per decision
+
+    @staticmethod
+    def add_cli_args(ap: argparse.ArgumentParser) -> None:
+        ap.add_argument("--controller", action="store_true",
+                        help="enable the online self-tuning controller "
+                             "(budget T, staleness D, batch target)")
+        ap.add_argument("--controller-interval", type=int,
+                        default=ControllerSpec.interval,
+                        help="epochs between controller decisions")
+        ap.add_argument("--controller-warmup", type=int,
+                        default=ControllerSpec.warmup,
+                        help="observe-only epochs before the first decision")
+        ap.add_argument("--controller-dmax", type=int,
+                        default=ControllerSpec.d_max,
+                        help="staleness ceiling for the controller")
+
+    @classmethod
+    def from_args(cls, args: argparse.Namespace) -> "ControllerSpec":
+        return cls(enabled=getattr(args, "controller", False),
+                   interval=getattr(args, "controller_interval",
+                                    ControllerSpec.interval),
+                   warmup=getattr(args, "controller_warmup",
+                                  ControllerSpec.warmup),
+                   d_max=getattr(args, "controller_dmax",
+                                 ControllerSpec.d_max))

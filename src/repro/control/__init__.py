@@ -1,0 +1,33 @@
+"""``repro.control`` — online self-tuning of budget, staleness, and batch.
+
+AMB's premise is adapting *work* to a fixed wall-clock budget; this
+package closes the loop on the budget itself (and its companions) at
+runtime, with no restarts:
+
+  * :mod:`repro.control.telemetry` — :class:`EpochRecord` per epoch
+    (measured times, per-node ``b_i(t)``, gradient-noise estimate) and
+    the :class:`Telemetry` EMAs over them.
+  * :mod:`repro.control.policies` — :class:`BudgetPolicy` (online
+    Lemma 6, subsuming the former ``core.extensions.AdaptiveBudget``),
+    :class:`StalenessPolicy` (AMB-DG ``D`` / ``gamma = 1/(2D)`` from the
+    measured ``T_c/T`` ratio), :class:`BatchDampingPolicy` (effective
+    batch target follows the gradient noise scale, adadamp-style).
+  * :mod:`repro.control.controller` — one :class:`Controller` that
+    consumes records, applies cadence / hysteresis / clipping, and
+    emits :class:`ControlAction`\\ s the session actuates.
+
+Configured by :class:`repro.api.specs.ControllerSpec`; wired into
+:class:`repro.api.AMBSession` (per-epoch hook) and ``--controller`` in
+``launch/train.py``.  This package deliberately imports nothing from
+``repro.api`` or ``repro.core`` — it is the bottom of that dependency
+stack.
+"""
+from .controller import ControlAction, Controller                # noqa: F401
+from .policies import (BatchDampingPolicy, BudgetPolicy,         # noqa: F401
+                       StalenessPolicy)
+from .telemetry import EpochRecord, Telemetry                    # noqa: F401
+
+__all__ = [
+    "BatchDampingPolicy", "BudgetPolicy", "ControlAction", "Controller",
+    "EpochRecord", "StalenessPolicy", "Telemetry",
+]

@@ -1,0 +1,160 @@
+"""The three control policies: budget, staleness, batch damping.
+
+Each policy is a frozen dataclass that maps smoothed telemetry to a
+*proposal* for one knob; the :class:`repro.control.controller.Controller`
+owns cadence, hysteresis, and actuation.  Policies are pure — no stored
+state beyond what the caller passes — so decisions are reproducible from
+a telemetry snapshot (the property the save/restore path leans on).
+
+* :class:`BudgetPolicy` — the online Lemma 6.  Subsumes (and is aliased
+  by) the former ``repro.core.extensions.AdaptiveBudget``: re-solve
+  ``T = (1 + n/b) mu`` each decision from the EMA'd mean per-gradient
+  time ``tau`` (``mu = (b/n) tau``).  The estimator matters: ``tau`` is
+  the arithmetic mean over nodes of ``T / b_i`` — inverting the
+  aggregate rate ``b(t)/T`` instead converges to the *harmonic* mean of
+  the node rates, which by Jensen undershoots Lemma 6's T whenever node
+  times are random.
+* :class:`StalenessPolicy` — AMB-DG retuning: the async driver's
+  per-epoch wall is ``max(T, T_c / D)``, so the smallest staleness that
+  keeps epochs compute-bound is ``D = ceil(T_c / T)``.  Track the
+  measured ratio, clip to ``[1, d_max]``, and only move when the ratio
+  clears the switching boundary by ``hysteresis`` (deadband against
+  thrash); ``gamma = 1/(2D)`` rides along (see
+  :mod:`repro.dist.async_epochs` for why the damping is load-bearing).
+* :class:`BatchDampingPolicy` — adadamp-style noise damping, AMB's
+  variable minibatch seen from the statistical end: the value of a
+  marginal gradient shrinks once the batch passes the gradient noise
+  scale ``B_noise = tr(Sigma) / ||grad L||^2``, and ``B_noise`` grows as
+  training drives ``||grad L||`` down.  The policy grows the *effective*
+  batch target toward ``alpha * B_noise`` (never shrinks below the
+  launch target), rate-limited to ``grow``x per decision and capped by
+  the data layout (``b_i <= batch_per_worker`` is a compiled shape).
+  The target feeds :class:`BudgetPolicy`'s re-solve, so the batch is
+  actuated *through the deadline T* — no recompile, the AMB way.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class BudgetPolicy:
+    """Online Lemma 6: re-solve the compute budget T from per-node times.
+
+    Two entry points share the same math:
+
+    * :meth:`solve` — the controller path: float in, float out, from a
+      telemetry-smoothed ``tau``.
+    * :meth:`init` / :meth:`update` — the jit-compatible EMA form the
+      single-device reference loop (``run_amb_adaptive``) scans with;
+      this is the exact ``AdaptiveBudget`` API, kept verbatim so the
+      alias in :mod:`repro.core.extensions` is a pure re-export.
+
+        tau_ema(t+1) = ema * tau_ema(t) + (1 - ema) * mean_i T(t)/b_i(t)
+        T(t+1)       = clip((1 + n/b) * (b/n) * tau_ema, t_min, t_max)
+    """
+
+    b_target: int
+    ema: float = 0.9
+    t_min: float = 1e-3
+    t_max: float = 1e6
+
+    def solve(self, tau: float, n: int,
+              b_target: Optional[int] = None) -> float:
+        """Lemma-6 T from a mean per-gradient-time estimate (host floats)."""
+        bt = float(self.b_target if b_target is None else b_target)
+        mu = (bt / n) * tau
+        return float(min(max((1.0 + n / bt) * mu, self.t_min), self.t_max))
+
+    def init(self, t0: float) -> dict:
+        # tau < 0 marks "no observation yet": the first update adopts the
+        # observed mean per-gradient time outright instead of averaging
+        # against the (possibly badly mis-tuned) implied initial value.
+        return {"t_budget": jnp.float32(t0), "tau": jnp.float32(-1.0)}
+
+    def update(self, state: dict, b_observed) -> dict:
+        """``b_observed``: the (n,) per-node minibatch sizes b_i(t)."""
+        b = jnp.maximum(b_observed.astype(jnp.float32), 1.0)
+        tau_obs = jnp.mean(state["t_budget"] / b)
+        tau = jnp.where(state["tau"] < 0.0, tau_obs,
+                        self.ema * state["tau"]
+                        + (1.0 - self.ema) * tau_obs)
+        n = b_observed.shape[0]
+        mu = (self.b_target / n) * tau
+        t_new = jnp.clip((1.0 + n / self.b_target) * mu,
+                         self.t_min, self.t_max)
+        return {"t_budget": t_new, "tau": tau}
+
+
+@dataclasses.dataclass(frozen=True)
+class StalenessPolicy:
+    """AMB-DG staleness retuning from the measured ``T_c / T`` ratio.
+
+    ``propose(d_cur, ratio)`` returns the staleness to run next —
+    ``d_cur`` itself unless the ratio clears the hysteresis deadband:
+
+    * raise to ``D* = ceil(ratio)`` only when ``ratio > d_cur +
+      hysteresis`` (consensus genuinely no longer fits d_cur windows);
+    * lower to ``D*`` only when ``ratio < D* + 1 - hysteresis`` holds
+      with room, i.e. ``ratio <= d_cur - 1 - hysteresis`` (the shallower
+      queue would still keep epochs compute-bound, with margin — less
+      staleness is free loss-trajectory improvement).
+
+    A ratio sitting exactly on a boundary therefore never flips D back
+    and forth between adjacent values epoch over epoch.
+    """
+
+    d_max: int = 8
+    hysteresis: float = 0.25
+
+    def target(self, ratio: float) -> int:
+        """The unhysteresed ideal: smallest D with ``T_c / D <= T``."""
+        return int(min(max(math.ceil(ratio - 1e-9), 1), self.d_max))
+
+    def propose(self, d_cur: int, ratio: float) -> int:
+        ideal = self.target(ratio)
+        if ideal > d_cur and ratio > d_cur + self.hysteresis:
+            return ideal
+        if ideal < d_cur and ratio <= d_cur - 1 - self.hysteresis:
+            return ideal
+        return d_cur
+
+    @staticmethod
+    def gamma(d: int) -> float:
+        """The delayed-mixing damping that rides with D (1/(2D); 1 at D=1)."""
+        return 1.0 if d <= 1 else 1.0 / (2.0 * d)
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchDampingPolicy:
+    """Grow the effective batch target as the gradient noise scale grows.
+
+    ``propose(b_cur, noise_scale)`` moves the target toward
+    ``alpha * noise_scale``, clipped to ``[b_floor, b_cap]``, never
+    shrinking below ``b_floor`` (the launch target) and never growing by
+    more than ``grow``x per decision; changes smaller than ``deadband``
+    (relative) are suppressed.  Returns ``b_cur`` when no noise
+    telemetry is available yet.
+    """
+
+    b_floor: int
+    b_cap: int
+    alpha: float = 1.0
+    grow: float = 2.0
+    deadband: float = 0.25
+
+    def propose(self, b_cur: int, noise_scale: Optional[float]) -> int:
+        if noise_scale is None:
+            return b_cur
+        want = self.alpha * noise_scale
+        want = min(max(want, float(self.b_floor)), float(self.b_cap))
+        want = min(want, self.grow * b_cur)       # rate limit
+        want = max(want, float(min(b_cur, self.b_cap)))   # grow-only
+        prop = int(round(want))
+        if abs(prop - b_cur) <= self.deadband * b_cur:
+            return b_cur
+        return prop

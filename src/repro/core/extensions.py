@@ -29,12 +29,15 @@ frontier:
    lower consensus error eps at equal communication time, i.e. a smaller
    Lemma-1 epsilon term in Theorem 2's regret bound.
 
-3. **Adaptive compute budget** (``adaptive_budget_controller``) — the paper
-   fixes T from an *offline* estimate of mu (Lemma 6).  On a real cluster mu
+3. **Adaptive compute budget** (``run_amb_adaptive``) — the paper fixes T
+   from an *offline* estimate of mu (Lemma 6).  On a real cluster mu
    drifts (the paper itself observes EC2 transients, §6.2).  A per-epoch
-   controller tracks the observed aggregate gradient rate with an EMA and
+   controller tracks the observed per-node gradient times with an EMA and
    re-solves Lemma 6's equation for T each epoch, keeping E[b(t)] pinned to
-   the target global batch without re-profiling.
+   the target global batch without re-profiling.  The controller itself now
+   lives in :class:`repro.control.policies.BudgetPolicy` (``AdaptiveBudget``
+   is a deprecated alias), where it is one of the three policies behind the
+   online :class:`repro.control.Controller`.
 """
 from __future__ import annotations
 
@@ -45,6 +48,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..control.policies import BudgetPolicy
 from . import consensus as cns
 from .dual_averaging import prox_step
 from .engine import EngineConfig, History, _masked_grads
@@ -401,47 +405,13 @@ def run_amb_quantized(objective, model: StragglerModel, cfg: EngineConfig, *,
 # 3. Adaptive compute budget: online Lemma-6
 # ---------------------------------------------------------------------------
 
-@dataclasses.dataclass(frozen=True)
-class AdaptiveBudget:
-    """EMA controller for the per-epoch compute budget T (online Lemma 6).
-
-    Lemma 6 sets  T = (1 + n/b) mu  where mu is the *mean* time a node needs
-    for b/n gradients — an arithmetic mean over nodes.  The controller
-    therefore estimates the mean per-gradient time from the per-node
-    observations  tau_i = T(t) / b_i(t)  and re-solves the lemma each epoch:
-
-        tau_ema(t+1) = ema * tau_ema(t) + (1 - ema) * mean_i T(t)/b_i(t)
-        T(t+1)       = clip((1 + n/b) * (b/n) * tau_ema, t_min, t_max).
-
-    (Inverting the *aggregate* rate b(t)/T(t) instead — the obvious
-    estimator — converges to the harmonic mean of the node rates, which by
-    Jensen undershoots Lemma 6's T whenever node times are random: fast
-    epochs contribute disproportionately many gradients.)  Converges to
-    Lemma 6's T on a stationary cluster; tracks it when mu drifts.
-    """
-
-    b_target: int
-    ema: float = 0.9
-    t_min: float = 1e-3
-    t_max: float = 1e6
-
-    def init(self, t0: float) -> dict:
-        # tau < 0 marks "no observation yet": the first update adopts the
-        # observed mean per-gradient time outright instead of averaging
-        # against the (possibly badly mis-tuned) implied initial value.
-        return {"t_budget": jnp.float32(t0), "tau": jnp.float32(-1.0)}
-
-    def update(self, state: dict, b_observed: Array) -> dict:
-        """``b_observed``: the (n,) per-node minibatch sizes b_i(t)."""
-        b = jnp.maximum(b_observed.astype(jnp.float32), 1.0)
-        tau_obs = jnp.mean(state["t_budget"] / b)
-        tau = jnp.where(state["tau"] < 0.0, tau_obs,
-                        self.ema * state["tau"] + (1.0 - self.ema) * tau_obs)
-        n = b_observed.shape[0]
-        mu = (self.b_target / n) * tau
-        t_new = jnp.clip((1.0 + n / self.b_target) * mu,
-                         self.t_min, self.t_max)
-        return {"t_budget": t_new, "tau": tau}
+# Deprecated alias: the online Lemma-6 controller moved to
+# ``repro.control.policies.BudgetPolicy`` (same fields, same ``init`` /
+# ``update`` API and numerics — the stationary fixed point still matches
+# Lemma 6, see tests/test_control.py), where it is one of the three
+# policies behind ``repro.control.Controller``.  Import it from
+# ``repro.control`` in new code; this name stays for existing callers.
+AdaptiveBudget = BudgetPolicy
 
 
 def run_amb_adaptive(objective, model_fn, cfg: EngineConfig, *,

@@ -62,6 +62,10 @@ class AMBConfig:
     active: Optional[tuple] = None    # elastic worker mask (None = all);
                                       # gossip taps rebuild on the induced
                                       # active subgraph
+    noise_stats: bool = False         # emit grad_sq_norm / grad_var metrics
+                                      # (repro.control telemetry); opt-in so
+                                      # default step graphs stay byte-
+                                      # identical
 
 
 def strategy_from_config(amb: AMBConfig, mesh) -> ConsensusStrategy:
@@ -253,6 +257,32 @@ def _local_grads(cfg, state, batch, b, beta_t, radius, n, per):
     return jax.vmap(local_grad)(state["z"], local, sw)
 
 
+def grad_noise_stats(grads, bw: Array) -> dict:
+    """Cheap minibatch gradient-noise signals from per-worker gradients.
+
+    ``grads``: tree of (n, *param) per-worker mean gradients; ``bw``: the
+    (n,) effective per-worker sample counts (0 for masked workers, whose
+    weight then vanishes).  Returns two scalars for
+    :mod:`repro.control.telemetry`:
+
+      * ``grad_sq_norm`` — ``||gbar||^2`` of the eq.-6 b-weighted mean
+        gradient (biased up by ``tr(Sigma)/B``; telemetry corrects);
+      * ``grad_var`` — the b-weighted between-worker dispersion
+        ``sum_i (b_i/B) ||g_i - gbar||^2``, expectation
+        ``tr(Sigma) (n-1)/B`` — a noise estimate that costs two scalar
+        reductions, no extra backward pass.
+    """
+    w = bw / jnp.maximum(bw.sum(), 1.0)
+    sq = jnp.float32(0.0)
+    var = jnp.float32(0.0)
+    for g in jax.tree.leaves(grads):
+        flat = g.astype(jnp.float32).reshape(g.shape[0], -1)
+        gbar = jnp.tensordot(w, flat, axes=(0, 0))
+        sq = sq + jnp.sum(gbar * gbar)
+        var = var + jnp.sum(w[:, None] * (flat - gbar) ** 2)
+    return {"grad_sq_norm": sq, "grad_var": var}
+
+
 def _init_gossip_state(params, mesh, n, waxes):
     """Per-worker dual replicas sharded along the worker axes."""
     from jax.sharding import NamedSharding, PartitionSpec as P
@@ -302,6 +332,8 @@ def make_gossip_train_step(cfg, mesh, amb: AMBConfig):
         metrics = {"loss": jnp.sum(bw * losses) / bsum,
                    "global_batch": bw.sum(),
                    "beta": beta(t.astype(jnp.float32) + 2.0)}
+        if amb.noise_stats:
+            metrics.update(grad_noise_stats(grads, bw))
         return {"z": z_new, "w0": state["w0"], "t": t + 1}, metrics
 
     return init_state, step

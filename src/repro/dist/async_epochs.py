@@ -64,8 +64,9 @@ import jax
 import jax.numpy as jnp
 
 from .amb import (AMBConfig, _init_gossip_state, _local_grads, flatten_dual,
-                  num_workers, pack_messages, strategy_from_config,
-                  unflatten_dual, unpack_duals, worker_axes)
+                  grad_noise_stats, num_workers, pack_messages,
+                  strategy_from_config, unflatten_dual, unpack_duals,
+                  worker_axes)
 from .pipeline import _msg_width
 
 Array = jax.Array
@@ -161,6 +162,8 @@ def make_async_gossip_train_step(cfg, mesh, amb: AMBConfig,
         metrics = {"loss": jnp.sum(bw * losses) / bsum,
                    "global_batch": bw.sum(),
                    "beta": beta(t.astype(jnp.float32) + 2.0)}
+        if amb.noise_stats:
+            metrics.update(grad_noise_stats(grads, bw))
         new_state = {"z": z_new, "w0": state["w0"], "t": t + 1,
                      "queue": state["queue"][1:] + (pending,)}
         if D > 1:

@@ -32,9 +32,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .amb import (AMBConfig, _init_gossip_state, _local_grads, num_workers,
-                  pack_messages, strategy_from_config, unpack_duals,
-                  worker_axes)
+from .amb import (AMBConfig, _init_gossip_state, _local_grads,
+                  grad_noise_stats, num_workers, pack_messages,
+                  strategy_from_config, unpack_duals, worker_axes)
 
 Array = jax.Array
 
@@ -109,6 +109,8 @@ def make_pipelined_gossip_train_step(cfg, mesh, amb: AMBConfig):
         metrics = {"loss": jnp.sum(bw * losses) / bsum,
                    "global_batch": bw.sum(),
                    "beta": beta(t.astype(jnp.float32) + 2.0)}
+        if amb.noise_stats:
+            metrics.update(grad_noise_stats(grads, bw))
         new_state = {"z": z_new, "w0": state["w0"], "t": t + 1,
                      "pending": pending}
         return new_state, metrics

@@ -52,6 +52,9 @@ def main(argv=None):
     ap.add_argument("--consensus", default="exact",
                     choices=list(CONSENSUS_CHOICES),
                     help="consensus strategy for --finetune")
+    ap.add_argument("--metrics", default=None, metavar="PATH",
+                    help="JSONL path for per-epoch --finetune metrics "
+                         "(written by the session's MetricsLogger)")
     args = ap.parse_args(argv)
 
     train = TrainSpec(arch=args.arch, smoke=args.smoke,
@@ -60,7 +63,8 @@ def main(argv=None):
                       data=args.data, model=args.model, seed=args.seed)
     try:
         session = AMBSession(train, ClockSpec(),
-                             ConsensusSpec(consensus=args.consensus))
+                             ConsensusSpec(consensus=args.consensus),
+                             metrics_path=args.metrics)
     except ValueError as e:
         raise SystemExit(str(e))
     cfg, mesh = session.cfg, session.mesh
@@ -76,6 +80,7 @@ def main(argv=None):
                 print(f"finetune {step:3d} loss {m['loss']:.4f} "
                       f"b(t)={m['global_batch']:.0f}")
         session.flush()
+        session.close()      # flush the metrics JSONL before decode
         print(f"finetune: {args.finetune} AMB steps in "
               f"{time.time() - t0:.2f}s")
 

@@ -1,28 +1,31 @@
 """AMB training driver: a thin CLI adapter over :class:`repro.api.AMBSession`.
 
-Every flag maps onto one of the three session specs
+Every flag maps onto one of the four session specs
 (:class:`repro.api.TrainSpec` / :class:`repro.api.ClockSpec` /
-:class:`repro.api.ConsensusSpec`); the session owns the mesh, the clock
-(measured by default, ``--sim-clock`` restores the paper-evaluation
-simulated clock — see :mod:`repro.api.clock`), the consensus strategy and
-the epoch driver.  This driver only streams batches, logs metrics, and
-checkpoints.
+:class:`repro.api.ConsensusSpec` / :class:`repro.api.ControllerSpec`);
+the session owns the mesh, the clock (measured by default, ``--sim-clock``
+restores the paper-evaluation simulated clock — see
+:mod:`repro.api.clock`), the consensus strategy, the epoch driver, and —
+under ``--controller`` — the online self-tuning loop over budget,
+staleness, and batch target.  This driver only streams batches and
+checkpoints; per-epoch metrics (and controller decisions) are written by
+the session itself via ``metrics_path``.
 
 Example (8 simulated devices, reduced qwen2, async torus gossip with two
-in-flight consensus payloads):
+in-flight consensus payloads, self-tuning on):
   XLA_FLAGS=--xla_force_host_platform_device_count=8 \
   PYTHONPATH=src python -m repro.launch.train --arch qwen2-1.5b --smoke \
       --steps 50 --data 4 --model 2 --consensus gossip --graph torus \
-      --async --staleness 2
+      --async --staleness 2 --controller
 (``--pipeline`` is the staleness-1 special case; ``--restore DIR``
-resumes a saved session.)
+resumes a saved session, controller state included.)
 """
 from __future__ import annotations
 
 import argparse
 
-from .. import metrics as metrics_mod
-from ..api import AMBSession, ClockSpec, ConsensusSpec, TrainSpec
+from ..api import (AMBSession, ClockSpec, ConsensusSpec, ControllerSpec,
+                   TrainSpec)
 from ..data import LMTokenStream
 
 
@@ -31,6 +34,7 @@ def main(argv=None):
     TrainSpec.add_cli_args(ap)
     ClockSpec.add_cli_args(ap)
     ConsensusSpec.add_cli_args(ap)
+    ControllerSpec.add_cli_args(ap)
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--restore", default=None, metavar="DIR",
@@ -40,21 +44,30 @@ def main(argv=None):
     ap.add_argument("--metrics", default=None)
     args = ap.parse_args(argv)
 
+    metrics_path = args.metrics
     try:
         if args.restore:
-            session = AMBSession.restore(args.restore)
+            session = AMBSession.restore(args.restore,
+                                         metrics_path=metrics_path)
+            if session.metrics is None:     # keep the arch-derived default
+                from ..metrics import MetricsLogger
+                session.metrics = MetricsLogger(
+                    f"artifacts/train_{session.train.arch}_"
+                    f"{session.train.mode}.jsonl")
         else:
-            session = AMBSession(TrainSpec.from_args(args),
-                                 ClockSpec.from_args(args),
-                                 ConsensusSpec.from_args(args))
+            train = TrainSpec.from_args(args)
+            session = AMBSession(
+                train, ClockSpec.from_args(args),
+                ConsensusSpec.from_args(args),
+                ControllerSpec.from_args(args),
+                metrics_path=metrics_path
+                or f"artifacts/train_{train.arch}_{train.mode}.jsonl")
     except ValueError as e:
         raise SystemExit(str(e))
     train = session.train
 
     stream = LMTokenStream(vocab_size=session.cfg.vocab_size,
                            seq_len=train.seq_len, seed=train.seed)
-    logger = metrics_mod.MetricsLogger(
-        args.metrics or f"artifacts/train_{train.arch}_{train.mode}.jsonl")
 
     loss = None          # a zero-step run is a well-defined no-op
     # absolute step indices (the session's own counter): a restored run
@@ -64,9 +77,8 @@ def main(argv=None):
     for step in range(start, start + args.steps):
         m = session.step(stream.batch(0, step, session.global_batch))
         loss = m["loss"]
-        logger.log(step, loss=loss, global_batch=m["global_batch"],
-                   sim_wall_s=m["sim_wall_s"], step_s=m["step_s"],
-                   budget_s=m["budget_s"])
+        if "action" in m:
+            print(f"step {step:4d} controller: {m['action']['reason']}")
         if step % 10 == 0 or step == start + args.steps - 1:
             print(f"step {step:4d} loss {loss:.4f} "
                   f"b(t)={m['global_batch']:.0f} "
@@ -76,7 +88,7 @@ def main(argv=None):
     if args.ckpt_dir:
         session.save(args.ckpt_dir)
         print(f"checkpoint saved to {args.ckpt_dir}")
-    logger.close()
+    session.close()
     return loss
 
 
