@@ -1,6 +1,7 @@
 # Repro convenience targets.  `make verify` is the tier-1 gate.
 
-.PHONY: verify verify-fast smoke controller-smoke docs-check bench-dist
+.PHONY: verify verify-fast smoke controller-smoke dataplane-smoke \
+        docs-check bench-dist
 
 verify:               # docs check + smokes + full pytest suite
 	scripts/verify.sh
@@ -13,6 +14,9 @@ smoke:                # just the programmatic-API smoke example
 
 controller-smoke:     # the online-controller end-to-end CI smoke
 	JAX_PLATFORMS=cpu python scripts/controller_smoke.py
+
+dataplane-smoke:      # prefetch + donation + kernel-routing CI smoke
+	JAX_PLATFORMS=cpu python scripts/dataplane_smoke.py
 
 docs-check:           # README/docs references must match the code
 	python scripts/check_docs.py

@@ -4,9 +4,11 @@ Demonstrates the whole Session surface on 8 simulated host devices:
 
   1. specs — build ``TrainSpec`` / ``ClockSpec`` / ``ConsensusSpec``,
      round-trip them through JSON (what a job file would store),
-  2. train — ``session.step(batch)`` under the paper's fixed-time
+  2. train — ``session.run(steps)`` under the paper's fixed-time
      contract (simulated straggler clock, torus gossip consensus,
-     AMB-DG async epochs: two consensus payloads in flight),
+     AMB-DG async epochs: two consensus payloads in flight), fed by the
+     prefetched data plane: per-worker LM-stream shards built on a
+     background thread and device-put ahead of the step,
   3. elastic membership — ``session.set_active(mask)`` drops a worker
      mid-run (its b_i(t) pins to 0, in-flight consensus drains, and the
      gossip taps rebuild on the active subgraph), then re-admits it,
@@ -31,7 +33,6 @@ import jax.numpy as jnp  # noqa: E402
 
 from repro.api import (AMBSession, ClockSpec, ConsensusSpec,  # noqa: E402
                        TrainSpec)
-from repro.data import LMTokenStream                          # noqa: E402
 from repro.dist import use_sharding                           # noqa: E402
 from repro.models import decode_step, prefill                 # noqa: E402
 
@@ -59,23 +60,25 @@ def main(argv=None):
     print(f"mesh {dict(session.mesh.shape)} -> {session.n_workers} workers, "
           f"global batch {session.global_batch}")
 
-    # 2. train under the fixed-time contract
-    stream = LMTokenStream(vocab_size=session.cfg.vocab_size,
-                           seq_len=train.seq_len, seed=train.seed)
-    for step in range(steps):
-        m = session.step(stream.batch(0, step, session.global_batch))
-        print(f"step {step:3d} loss {m['loss']:.4f} "
-              f"b(t)={m['global_batch']:.0f} T={m['budget_s']:.3f}s")
+    # 2. train under the fixed-time contract, fed by the prefetched
+    # data plane (the session's default source: worker i draws node i's
+    # shard of the LM token stream)
+    session.run(steps, on_step=lambda s, m: print(
+        f"step {s - 1:3d} loss {m['loss']:.4f} "
+        f"b(t)={m['global_batch']:.0f} T={m['budget_s']:.3f}s"))
 
-    # 3. elastic membership: worker 2 leaves (spot preemption), rejoins
+    # 3. elastic membership: worker 2 leaves (spot preemption), rejoins.
+    # session.step(batch) stays the single-epoch primitive for callers
+    # that hand-build batches — here, straddling membership changes
+    source = session.batch_source()
     mask = session.active
     mask[2] = False
     session.set_active(mask)
-    m = session.step(stream.batch(0, steps, session.global_batch))
+    m = session.step(source.batch(session.steps_done))
     assert m["b"][2] == 0, "dropped worker must contribute b_i(t) = 0"
     print(f"worker 2 dropped: b(t) per worker = {m['b'].tolist()}")
     session.set_active([True] * session.n_workers)
-    m = session.step(stream.batch(0, steps + 1, session.global_batch))
+    m = session.step(source.batch(session.steps_done))
     print(f"worker 2 rejoined: b(t) per worker = {m['b'].tolist()}")
 
     # 4. serve from the same session: flush in-flight consensus, decode
@@ -110,8 +113,7 @@ def main(argv=None):
                   zip(jax.tree.leaves(session.params),
                       jax.tree.leaves(restored.params)))
         assert err == 0.0, f"restore drifted: {err}"
-        m = restored.step(stream.batch(0, steps + 2,
-                                       restored.global_batch))
+        m = restored.run(1)     # resumes the data order at steps_done
         print(f"restored at step {restored.steps_done - 1}, "
               f"continued: loss {m['loss']:.4f}")
     print("OK")

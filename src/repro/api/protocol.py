@@ -35,6 +35,18 @@ counter ``"t"``; the mode-specific leaves are documented per protocol:
 ``if gossip / if pipeline`` branching; launch, serve, dry-run, and the
 benchmarks all construct their step through it (directly or via
 :class:`repro.api.AMBSession`).
+
+**Donation contract.**  Every protocol's ``step`` and ``flush`` return a
+state whose leaves alias the input state's leaves one-for-one in shape,
+dtype, and sharding — ``step`` rewrites values, never structure (the
+epoch counter increments, queues rotate in place, no leaf appears or
+changes layout mid-run).  That invariant is what lets
+:class:`repro.api.AMBSession` jit them with ``donate_argnums=0``: XLA
+reuses the old TrainState's buffers for the new one instead of holding
+parameters, dual replicas, optimizer state, and the in-flight consensus
+queue doubly live across the update.  The factories themselves stay
+donation-free — callers that reuse a state after stepping (tests, the
+benchmarks' repeated-timing loops) jit without donation.
 """
 from __future__ import annotations
 

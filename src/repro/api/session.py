@@ -10,11 +10,20 @@ gossip, quantized-gossip, and pipelined modes:
                                    model=2),
                          ClockSpec(kind="simulated"),
                          ConsensusSpec(consensus="gossip", graph="torus"))
-    for step in range(steps):
-        metrics = session.step(stream.batch(0, step, session.global_batch))
+    metrics = session.run(steps)          # prefetched data plane
     session.flush()                       # settle in-flight consensus
     session.save("ckpt/")                 # primal checkpoint, any mode
     w = session.params                    # current primal iterate
+
+    ``run`` feeds the session from an :class:`repro.data.InputSource`
+    (default: :meth:`batch_source`, per-worker shards of the arch's LM
+    token stream) through a background :class:`repro.data.Prefetcher`,
+    overlapping epoch t's device step with epoch t+1's host build +
+    transfer.  ``step(batch)`` remains the single-epoch primitive for
+    callers that hand-build batches.  The jitted step/flush donate the
+    TrainState (``donate_argnums=0``): every protocol's output state
+    leaf aliases its input leaf, so the old iterate's buffers are
+    reused in place instead of briefly doubling resident memory.
 
 Elastic worker membership is first-class: ``session.set_active(mask)``
 exploits AMB's existing b_i(t) = 0 tolerance — a masked worker's
@@ -40,10 +49,12 @@ from ..ckpt import load_checkpoint, save_checkpoint
 from ..configs import get_config, smoke_config
 from ..control import Controller, EpochRecord
 from ..core.stragglers import amb_batch_sizes, fmb_finish_times
-from ..data import shard_batch
+from ..data import Prefetcher, StreamSource, put_batch
+from ..data.pipeline import LMTokenStream
 from ..dist import use_sharding
 from ..dist.amb import num_workers
 from ..dist.params import tree_shardings
+from ..kernels import router
 from ..launch.mesh import make_host_mesh
 from ..metrics import MetricsLogger
 from ..models import init_params
@@ -53,6 +64,30 @@ from .protocol import build_protocol
 from .specs import ClockSpec, ConsensusSpec, ControllerSpec, TrainSpec
 
 Array = jax.Array
+
+
+def _unalias(state):
+    """Break object aliasing between TrainState leaves.
+
+    ``donate_argnums`` requires every donated buffer to appear exactly
+    once in the arguments, but freshly-*initialized* states can hold one
+    array under two leaves (e.g. fp32 params, where the dual-averaging
+    ``opt["w0"] = params.astype(f32)`` no-op returns ``params`` itself)
+    — stepping such a state donates the buffer twice and XLA rejects the
+    execute.  Copying the repeat occurrences once at assembly restores
+    the protocols' aliasing contract; stepped states are always
+    alias-free (each output leaf owns its buffer).
+    """
+    seen: set = set()
+
+    def u(x):
+        if isinstance(x, jax.Array):
+            if id(x) in seen:
+                return jnp.copy(x)
+            seen.add(id(x))
+        return x
+
+    return jax.tree.map(u, state)
 
 
 class AMBSession:
@@ -89,6 +124,10 @@ class AMBSession:
                  controller: Optional[ControllerSpec] = None, *,
                  mesh=None, params=None, cfg=None, metrics_path=None):
         self.train = train
+        if train.kernels != "auto":
+            # pin the kernel routing for the process (logged once by the
+            # router); "auto" leaves any ambient REPRO_KERNELS in force
+            router.set_mode(train.kernels)
         self.clock_spec = clock if clock is not None else ClockSpec()
         self.consensus_spec = consensus if consensus is not None \
             else ConsensusSpec()
@@ -144,7 +183,7 @@ class AMBSession:
                 params = jax.tree.map(
                     lambda p, sh: jax.device_put(p, sh), params,
                     tree_shardings(params, self.mesh))
-            self.state = self.protocol.init(params)
+            self.state = _unalias(self.protocol.init(params))
         self.steps_done = 0
         self.sim_wall = 0.0
 
@@ -174,8 +213,14 @@ class AMBSession:
                 pipeline=self.consensus_spec.pipeline,
                 async_epochs=self.consensus_spec.async_epochs,
                 staleness=self.consensus_spec.staleness)
-            self._protocols[key] = (proto, jax.jit(proto.step),
-                                    jax.jit(proto.flush))
+            # donate the TrainState: every protocol's output state leaf
+            # aliases its input leaf (shape/dtype/sharding — the
+            # contract repro.api.protocol documents), so XLA rewrites
+            # the iterate in place instead of holding old + new
+            # parameter/dual/queue buffers live across the update
+            self._protocols[key] = (
+                proto, jax.jit(proto.step, donate_argnums=0),
+                jax.jit(proto.flush, donate_argnums=0))
         self.protocol, self._step_fn, self._flush_fn = self._protocols[key]
 
     # -- elastic membership ------------------------------------------------
@@ -268,7 +313,7 @@ class AMBSession:
                 self.sim_wall += float(jnp.max(fmb_finish_times(
                     times, self.train.batch_per_worker))) \
                     + self.clock_spec.comm_time
-            batch = shard_batch(batch, self.mesh, self._batch_axes)
+            batch = put_batch(batch, self.mesh, self._batch_axes)
             t0 = time.time()
             self.state, m = self._step_fn(self.state, batch, b)
             loss = float(m["loss"])
@@ -291,6 +336,56 @@ class AMBSession:
                                  **{k: v for k, v in out.items()
                                     if k != "b"})
             return out
+
+    def batch_source(self) -> StreamSource:
+        """The session's default input: per-worker shards of the arch's
+        LM token stream (worker i draws stream node i — distinct i.i.d.
+        shards, deterministic in (seed, node, epoch) so restores resume
+        the exact remaining stream)."""
+        return StreamSource(
+            LMTokenStream(vocab_size=self.cfg.vocab_size,
+                          seq_len=self.train.seq_len,
+                          seed=self.train.seed),
+            self.n_workers, self.train.batch_per_worker)
+
+    def run(self, steps: int, source=None, *, prefetch: int = 2,
+            on_step=None) -> Optional[dict]:
+        """Run ``steps`` epochs fed by ``source`` through the prefetched
+        data plane; returns the last epoch's metrics (None at 0 steps).
+
+        ``source`` is any :class:`repro.data.InputSource` (default:
+        :meth:`batch_source`).  With ``prefetch >= 1`` a background
+        :class:`repro.data.Prefetcher` keeps that many batches
+        device-resident ahead of the consumer — epochs are drawn from
+        the source at absolute indices ``steps_done .. steps_done +
+        steps``, so a restored session continues the data order where
+        the saved one stopped.  ``prefetch=0`` is the synchronous
+        baseline (build, put, then step — the pre-dataplane behavior,
+        kept for A/B timing).  ``on_step(step, metrics)`` is called
+        after every epoch with the session's absolute step counter.
+        """
+        if steps <= 0:
+            return None
+        if source is None:
+            source = self.batch_source()
+        out = None
+        if prefetch < 1:
+            for epoch in range(self.steps_done, self.steps_done + steps):
+                out = self.step(source.batch(epoch))
+                if on_step is not None:
+                    on_step(self.steps_done, out)
+            return out
+        pf = Prefetcher(source, self.mesh, self._batch_axes,
+                        depth=prefetch, start_epoch=self.steps_done,
+                        steps=steps)
+        try:
+            for batch in pf:
+                out = self.step(batch)
+                if on_step is not None:
+                    on_step(self.steps_done, out)
+        finally:
+            pf.close()
+        return out
 
     def _control(self, m: dict, out: dict, b: Array, times: Array):
         """Feed the epoch to the controller; apply any action in-place."""
@@ -362,7 +457,7 @@ class AMBSession:
             fresh["z"] = self.state["z"]
             fresh["w0"] = self.state["w0"]
             fresh["t"] = self.state["t"]
-            self.state = fresh
+            self.state = _unalias(fresh)
 
     def close(self) -> None:
         """Release the metrics logger (idempotent)."""
@@ -476,7 +571,8 @@ class AMBSession:
             return jnp.asarray(got)
 
         with use_sharding(session.mesh):
-            session.state = jax.tree.map(land, state, session.state)
+            session.state = _unalias(jax.tree.map(land, state,
+                                                  session.state))
         session.steps_done = step_sel
         session.sim_wall = float(meta.get("sim_wall_s", 0.0))
         if meta.get("sec_per_grad") is not None \

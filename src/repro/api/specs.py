@@ -79,6 +79,10 @@ class TrainSpec(_Spec):
     optimizer: str = "dual_averaging"
     mode: str = "amb"                 # amb | fmb
     seed: int = 0
+    kernels: str = "auto"             # kernel routing: auto | pallas | ref
+                                      # | pallas_interpret (repro.kernels.
+                                      # router; auto = Pallas on TPU/GPU,
+                                      # jnp ref on CPU)
 
     @staticmethod
     def add_cli_args(ap: argparse.ArgumentParser) -> None:
@@ -96,13 +100,21 @@ class TrainSpec(_Spec):
         ap.add_argument("--mode", default=TrainSpec.mode,
                         choices=list(MODES))
         ap.add_argument("--seed", type=int, default=TrainSpec.seed)
+        from ..kernels.router import MODES as KERNEL_MODES
+        ap.add_argument("--kernels", default=TrainSpec.kernels,
+                        choices=list(KERNEL_MODES),
+                        help="kernel backend routing: auto picks compiled "
+                             "Pallas on TPU/GPU and the jnp reference on "
+                             "CPU (interpret mode never runs on the hot "
+                             "path unless forced)")
 
     @classmethod
     def from_args(cls, args: argparse.Namespace) -> "TrainSpec":
         return cls(arch=args.arch, smoke=args.smoke, seq_len=args.seq_len,
                    batch_per_worker=args.batch_per_worker, data=args.data,
                    model=args.model, pod=args.pod, optimizer=args.optimizer,
-                   mode=args.mode, seed=args.seed)
+                   mode=args.mode, seed=args.seed,
+                   kernels=getattr(args, "kernels", TrainSpec.kernels))
 
 
 # ---------------------------------------------------------------------------

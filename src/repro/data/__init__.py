@@ -1,5 +1,8 @@
+from .loader import (CostedSource, InputSource, Prefetcher, StreamSource,
+                     SyntheticSource, make_source, put_batch)
 from .pipeline import (LMTokenStream, LinRegStream, LogRegStream,
                        make_stream, shard_batch)
 
 __all__ = ["LMTokenStream", "LinRegStream", "LogRegStream", "make_stream",
-           "shard_batch"]
+           "shard_batch", "put_batch", "InputSource", "StreamSource",
+           "SyntheticSource", "CostedSource", "Prefetcher", "make_source"]

@@ -114,11 +114,13 @@ def make_stream(kind: str, **kw):
 
 
 def shard_batch(batch, mesh, batch_axes=("data",)):
-    """Place a host batch onto the mesh, batch dim over the worker axes."""
-    from jax.sharding import NamedSharding, PartitionSpec as P
+    """Deprecated alias for :func:`repro.data.loader.put_batch`.
 
-    def put(x):
-        spec = P(batch_axes, *([None] * (x.ndim - 1)))
-        return jax.device_put(x, NamedSharding(mesh, spec))
-
-    return jax.tree.map(put, batch)
+    The historical implementation issued one ``device_put`` per leaf;
+    the loader's put commits the whole batch tree in a single call (the
+    runtime batches the transfers).  Kept as a thin alias for existing
+    callers — new code should import ``put_batch`` (or better, feed the
+    session through an :class:`repro.data.loader.InputSource`).
+    """
+    from .loader import put_batch
+    return put_batch(batch, mesh, batch_axes)

@@ -2,8 +2,10 @@
 
 Each kernel: ``<name>.py`` (pl.pallas_call + BlockSpec), a jit'd wrapper in
 ``ops.py``, and a pure-jnp oracle in ``ref.py``; tests sweep shapes/dtypes in
-interpret mode against the oracle.
+interpret mode against the oracle.  ``router.py`` owns the backend routing
+(compiled Pallas on TPU/GPU, jnp reference on CPU; ``REPRO_KERNELS`` /
+``TrainSpec.kernels`` override), decided and logged once.
 """
-from . import ops, ref
+from . import ops, ref, router
 
-__all__ = ["ops", "ref"]
+__all__ = ["ops", "ref", "router"]

@@ -1,9 +1,11 @@
 """jit'd public wrappers around the Pallas kernels.
 
-Routing policy: on TPU backends the Pallas kernel runs compiled; on CPU (this
-container) the pure-jnp oracle from :mod:`ref` runs instead, and the kernels
-themselves are exercised under ``interpret=True`` by the test suite.  Pass
-``force="pallas_interpret"`` to exercise the kernel body anywhere.
+Every wrapper dispatches through :mod:`repro.kernels.router` — compiled
+Pallas on TPU/GPU, the pure-jnp reference on CPU (interpret mode is a
+debugging oracle, never a silent production path), overridable globally
+via ``REPRO_KERNELS`` / ``TrainSpec.kernels`` and per call via ``force``
+(the test suite's oracle sweeps).  The routing decision is made at trace
+time and logged once by the router.
 """
 from __future__ import annotations
 
@@ -12,7 +14,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from . import ref
+from . import ref, router
 from .dual_update import dual_update_pallas
 from .flash_attention import flash_attention_pallas
 from .gossip_combine import (gossip_combine_pallas, quantized_combine_pallas,
@@ -22,17 +24,14 @@ from .rwkv6_scan import rwkv6_scan_pallas
 Array = jax.Array
 
 
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
-
-
 def dual_update(z: Array, w0: Array, beta: Array,
                 radius: Optional[float] = None,
                 force: Optional[str] = None) -> Array:
     """w = w0 - z/(2 beta), optionally projected onto ||w - w0|| <= radius."""
-    if force == "pallas_interpret":
+    impl = router.resolve(force)
+    if impl == "pallas_interpret":
         w = dual_update_pallas(z, w0, beta, interpret=True)
-    elif force == "ref" or not _on_tpu():
+    elif impl == "ref":
         w = ref.dual_update_ref(z, w0, beta)
     else:
         w = dual_update_pallas(z, w0, beta)
@@ -46,9 +45,11 @@ def dual_update(z: Array, w0: Array, beta: Array,
 
 def gossip_combine(msgs: Array, weights: Array,
                    force: Optional[str] = None) -> Array:
-    if force == "pallas_interpret":
+    """K-way weighted combine of stacked neighbor messages: (K, N) -> (N,)."""
+    impl = router.resolve(force)
+    if impl == "pallas_interpret":
         return gossip_combine_pallas(msgs, weights, interpret=True)
-    if force == "ref" or not _on_tpu():
+    if impl == "ref":
         return ref.gossip_combine_ref(msgs, weights)
     return gossip_combine_pallas(msgs, weights)
 
@@ -57,10 +58,11 @@ def stochastic_quantize(m: Array, h: Array, rnd: Array, lo: Array,
                         scale: Array, levels: float = 255.0,
                         force: Optional[str] = None):
     """Send half of a quantized gossip round: (levels u8, updated replica)."""
-    if force == "pallas_interpret":
+    impl = router.resolve(force)
+    if impl == "pallas_interpret":
         return stochastic_quantize_pallas(m, h, rnd, lo, scale,
                                           levels=levels, interpret=True)
-    if force == "ref" or not _on_tpu():
+    if impl == "ref":
         return ref.stochastic_quantize_ref(m, h, rnd, lo, scale, levels)
     return stochastic_quantize_pallas(m, h, rnd, lo, scale, levels=levels)
 
@@ -69,10 +71,11 @@ def quantized_combine(m: Array, hnbr: Array, lvl: Array, lo: Array,
                       scale: Array, weights: Array,
                       force: Optional[str] = None):
     """Receive half: fused dequantize + replica update + K-way combine."""
-    if force == "pallas_interpret":
+    impl = router.resolve(force)
+    if impl == "pallas_interpret":
         return quantized_combine_pallas(m, hnbr, lvl, lo, scale, weights,
                                         interpret=True)
-    if force == "ref" or not _on_tpu():
+    if impl == "ref":
         return ref.quantized_combine_ref(m, hnbr, lvl, lo, scale, weights)
     return quantized_combine_pallas(m, hnbr, lvl, lo, scale, weights)
 
@@ -81,10 +84,11 @@ def flash_attention(q: Array, k: Array, v: Array, *, causal: bool = True,
                     window: int = 0, q_offset: int = 0,
                     force: Optional[str] = None) -> Array:
     """(B, H, Sq, hd) x (B, KV, Skv, hd) -> (B, H, Sq, hd)."""
-    if force == "pallas_interpret":
+    impl = router.resolve(force)
+    if impl == "pallas_interpret":
         return flash_attention_pallas(q, k, v, causal=causal, window=window,
                                       q_offset=q_offset, interpret=True)
-    if force == "ref" or not _on_tpu():
+    if impl == "ref":
         return ref.flash_attention_ref(q, k, v, causal=causal, window=window,
                                        q_offset=q_offset).astype(q.dtype)
     return flash_attention_pallas(q, k, v, causal=causal, window=window,
@@ -94,9 +98,10 @@ def flash_attention(q: Array, k: Array, v: Array, *, causal: bool = True,
 def rwkv6_scan(r: Array, k: Array, v: Array, decay: Array, u: Array,
                force: Optional[str] = None) -> Array:
     """(BH, S, hd) wkv scan; u (BH, hd). Returns fp32 (BH, S, hd)."""
-    if force == "pallas_interpret":
+    impl = router.resolve(force)
+    if impl == "pallas_interpret":
         return rwkv6_scan_pallas(r, k, v, decay, u, interpret=True)
-    if force == "ref" or not _on_tpu():
+    if impl == "ref":
         bh, s, hd = r.shape
         rr = lambda t: t.reshape(1, bh, s, hd)   # treat BH rows as heads
         y = ref.rwkv6_chunk_ref(rr(r), rr(k), rr(v), rr(decay),

@@ -1,0 +1,86 @@
+"""Backend routing for the kernel layer: which implementation runs where.
+
+Every public wrapper in :mod:`repro.kernels.ops` has three bodies — the
+compiled Pallas kernel, the same kernel under ``interpret=True`` (a
+debugging/oracle mode that emulates the TPU grid step by step, ~80x
+slower than plain XLA at model-sized inputs; see the ``gossip_combine``
+sweep in ``artifacts/bench/BENCH_dist.json``), and a pure-jnp reference.
+This module owns the *routing decision* so it is made once, logged once,
+and overridable in one place instead of per call site:
+
+  * ``tpu`` / ``gpu`` backends -> ``"pallas"`` (the compiled kernel);
+  * ``cpu`` (and anything else) -> ``"ref"`` — the jnp reference is real
+    compiled XLA, while interpret mode must never be what a production
+    step silently executes;
+  * the ``REPRO_KERNELS`` environment variable or
+    :func:`set_mode` (wired to ``TrainSpec.kernels`` /
+    ``--kernels`` by :class:`repro.api.AMBSession`) force ``"pallas"``,
+    ``"ref"``, or ``"pallas_interpret"`` anywhere — for TPU bring-up,
+    CPU kernel debugging, and A/B timing.
+
+The first resolution is logged at INFO on the ``repro.kernels`` logger;
+per-call ``force=`` arguments (the test suite's oracle sweeps) bypass
+the router and are never logged.
+"""
+from __future__ import annotations
+
+import logging
+import os
+from typing import Optional
+
+MODES = ("auto", "pallas", "ref", "pallas_interpret")
+_ENV = "REPRO_KERNELS"
+_PALLAS_BACKENDS = ("tpu", "gpu")
+
+_log = logging.getLogger("repro.kernels")
+_mode: Optional[str] = None         # set_mode override (spec/session)
+_announced: Optional[tuple] = None  # (decision, backend) already logged
+
+
+def set_mode(mode: Optional[str]) -> None:
+    """Pin the routing mode programmatically (``None``/"auto" = decide
+    from the backend again; logged anew on the next resolve)."""
+    global _mode, _announced
+    if mode is not None and mode not in MODES:
+        raise ValueError(f"unknown kernel mode {mode!r}; "
+                         f"choose from {MODES}")
+    _mode = None if mode in (None, "auto") else mode
+    _announced = None
+
+
+def mode() -> str:
+    """The requested mode: set_mode override, else env, else auto."""
+    if _mode is not None:
+        return _mode
+    env = os.environ.get(_ENV, "auto")
+    if env not in MODES:
+        raise ValueError(f"{_ENV}={env!r} is not one of {MODES}")
+    return env
+
+
+def resolve(force: Optional[str] = None) -> str:
+    """The implementation to run: ``pallas`` | ``ref`` |
+    ``pallas_interpret``.
+
+    ``force`` (a per-call test hook) wins and is not logged; otherwise
+    the requested :func:`mode` applies, with ``auto`` routing compiled
+    Pallas on TPU/GPU and the jnp reference on CPU.  The decision is
+    logged once per (mode, backend) so the hot path stays silent.
+    """
+    if force is not None:
+        if force not in MODES[1:]:
+            raise ValueError(f"unknown kernel force {force!r}; "
+                             f"choose from {MODES[1:]}")
+        return force
+    import jax
+    m = mode()
+    backend = jax.default_backend()
+    decided = m if m != "auto" else (
+        "pallas" if backend in _PALLAS_BACKENDS else "ref")
+    global _announced
+    if _announced != (decided, backend):
+        _announced = (decided, backend)
+        _log.info("kernel routing: backend=%s mode=%s -> %s "
+                  "(override via %s or TrainSpec.kernels)",
+                  backend, m, decided, _ENV)
+    return decided

@@ -8,7 +8,9 @@ slot array).
 
 ``--finetune N`` runs N batch-parallel AMB fine-tuning steps through the
 session *before* decoding — the session owns the mesh, the sharded
-parameters, the clock, and the consensus strategy, and ``session.params``
+parameters, the clock, the consensus strategy, and the prefetched data
+plane (``session.run`` feeds per-worker LM-stream shards through a
+background :class:`repro.data.Prefetcher`), and ``session.params``
 hands the post-fine-tune primal straight to prefill/decode.  With
 ``--finetune 0`` (default) the session still does the mesh + param setup,
 so decode-only serving shares the exact same initialization path as
@@ -27,7 +29,6 @@ import jax
 import jax.numpy as jnp
 
 from ..api import AMBSession, ClockSpec, ConsensusSpec, TrainSpec
-from ..data import LMTokenStream
 from ..dist import use_sharding
 from ..models import decode_step, prefill
 
@@ -70,15 +71,17 @@ def main(argv=None):
     cfg, mesh = session.cfg, session.mesh
 
     if args.finetune:
-        stream = LMTokenStream(vocab_size=cfg.vocab_size,
-                               seq_len=args.finetune_seq_len,
-                               seed=args.seed)
         t0 = time.time()
-        for step in range(args.finetune):
-            m = session.step(stream.batch(0, step, session.global_batch))
+
+        def on_step(step, m):
+            step = step - 1      # the 0-based epoch that just ran
             if step % 5 == 0 or step == args.finetune - 1:
                 print(f"finetune {step:3d} loss {m['loss']:.4f} "
                       f"b(t)={m['global_batch']:.0f}")
+
+        # prefetched data plane: the session's default per-worker
+        # LM-stream shards, built + device-put ahead of the step
+        session.run(args.finetune, on_step=on_step)
         session.flush()
         session.close()      # flush the metrics JSONL before decode
         print(f"finetune: {args.finetune} AMB steps in "

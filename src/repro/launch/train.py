@@ -7,9 +7,12 @@ the session owns the mesh, the clock (measured by default, ``--sim-clock``
 restores the paper-evaluation simulated clock — see
 :mod:`repro.api.clock`), the consensus strategy, the epoch driver, and —
 under ``--controller`` — the online self-tuning loop over budget,
-staleness, and batch target.  This driver only streams batches and
-checkpoints; per-epoch metrics (and controller decisions) are written by
-the session itself via ``metrics_path``.
+staleness, and batch target.  This driver only selects the input source
+and checkpoints; batches flow through the session's prefetched data
+plane (``session.run`` — per-worker stream shards, background host
+build + device put, ``--prefetch`` buffers deep), and per-epoch metrics
+(and controller decisions) are written by the session itself via
+``metrics_path``.
 
 Example (8 simulated devices, reduced qwen2, async torus gossip with two
 in-flight consensus payloads, self-tuning on):
@@ -26,7 +29,6 @@ import argparse
 
 from ..api import (AMBSession, ClockSpec, ConsensusSpec, ControllerSpec,
                    TrainSpec)
-from ..data import LMTokenStream
 
 
 def main(argv=None):
@@ -36,6 +38,9 @@ def main(argv=None):
     ConsensusSpec.add_cli_args(ap)
     ControllerSpec.add_cli_args(ap)
     ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--prefetch", type=int, default=2,
+                    help="data-plane prefetch depth (batches built + "
+                         "device-put ahead of the step; 0 = synchronous)")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--restore", default=None, metavar="DIR",
                     help="resume from an AMBSession.save directory "
@@ -64,26 +69,28 @@ def main(argv=None):
                 or f"artifacts/train_{train.arch}_{train.mode}.jsonl")
     except ValueError as e:
         raise SystemExit(str(e))
-    train = session.train
+    # session.run draws epochs at the session's own absolute counter, so
+    # a restored run continues both the data order and the logged step
+    # axis where the saved one stopped instead of re-emitting steps 0..N
+    last = session.steps_done + args.steps - 1
 
-    stream = LMTokenStream(vocab_size=session.cfg.vocab_size,
-                           seq_len=train.seq_len, seed=train.seed)
-
-    loss = None          # a zero-step run is a well-defined no-op
-    # absolute step indices (the session's own counter): a restored run
-    # continues both the data order and the logged step axis where the
-    # saved one stopped instead of re-emitting steps 0..N
-    start = session.steps_done
-    for step in range(start, start + args.steps):
-        m = session.step(stream.batch(0, step, session.global_batch))
-        loss = m["loss"]
+    def on_step(step, m):
+        # on_step reports steps_done (the post-increment counter); print
+        # the 0-based index of the epoch that just ran
+        step = step - 1
         if "action" in m:
             print(f"step {step:4d} controller: {m['action']['reason']}")
-        if step % 10 == 0 or step == start + args.steps - 1:
-            print(f"step {step:4d} loss {loss:.4f} "
+        if step % 10 == 0 or step == last:
+            print(f"step {step:4d} loss {m['loss']:.4f} "
                   f"b(t)={m['global_batch']:.0f} "
                   f"T={m['budget_s']:.3f}s "
                   f"sim_wall={m['sim_wall_s']:.1f}s")
+
+    # the prefetched data plane: per-worker shards of the arch's LM
+    # stream (worker i draws stream node i), host build + device put
+    # overlapped with the previous epoch's step
+    m = session.run(args.steps, prefetch=args.prefetch, on_step=on_step)
+    loss = None if m is None else m["loss"]   # zero-step run: no-op
     session.flush()      # settle in-flight gossip (pipelined mode)
     if args.ckpt_dir:
         session.save(args.ckpt_dir)
