@@ -1,7 +1,7 @@
 # Repro convenience targets.  `make verify` is the tier-1 gate.
 
 .PHONY: verify verify-fast smoke controller-smoke dataplane-smoke \
-        docs-check bench-dist
+        churn-smoke docs-check bench-dist
 
 verify:               # docs check + smokes + full pytest suite
 	scripts/verify.sh
@@ -17,6 +17,9 @@ controller-smoke:     # the online-controller end-to-end CI smoke
 
 dataplane-smoke:      # prefetch + donation + kernel-routing CI smoke
 	JAX_PLATFORMS=cpu python scripts/dataplane_smoke.py
+
+churn-smoke:          # Poisson churn + coded redundancy CI smoke
+	JAX_PLATFORMS=cpu python scripts/churn_smoke.py
 
 docs-check:           # README/docs references must match the code
 	python scripts/check_docs.py

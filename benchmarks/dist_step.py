@@ -40,7 +40,14 @@ host-device mesh (forced device count, CPU-friendly smoke config):
     (``--controller``; :mod:`repro.control`) vs static (D, budget)
     settings under a *shifting* straggler clock — the per-gradient rate
     jumps 3x mid-run, the statics keep their launch tuning, the
-    controller re-solves Lemma 6 and retunes D from telemetry.
+    controller re-solves Lemma 6 and retunes D from telemetry,
+  * the ``dist_churn`` section: graceful degradation under Poisson
+    worker churn (:mod:`repro.faults`) — loss trajectory and epoch wall
+    for coded (``--redundancy``; :mod:`repro.dist.redundancy`) vs
+    uncoded fleets against the no-churn baselines, plus the
+    survivor-relayout fast-path check (churned ring combines compile to
+    collective-permutes, never the dense ``P @ m`` fallback) and the
+    relayout-vs-dense combine timing.
 
 Writes ``artifacts/bench/BENCH_dist.json`` and prints the
 ``name,us_per_call,derived`` CSV rows (benchmarks/run.py conventions).
@@ -63,6 +70,7 @@ from pathlib import Path  # noqa: E402
 
 import jax               # noqa: E402
 import jax.numpy as jnp  # noqa: E402
+import numpy as np       # noqa: E402
 
 from repro.api.protocol import build_protocol               # noqa: E402
 from repro.configs import smoke_config                      # noqa: E402
@@ -272,7 +280,8 @@ def bench_pipelined(arch: str, steps: int, seq_len: int,
     previous epoch's message (staleness 1).
     """
     from repro.dist.amb import (_local_grads, pack_messages,
-                                strategy_from_config, unpack_duals)
+                                seq_weights_from_b, strategy_from_config,
+                                unpack_duals)
 
     mesh = jax.make_mesh((4, 2), ("data", "model"))
     cfg = smoke_config(arch)
@@ -301,7 +310,8 @@ def bench_pipelined(arch: str, steps: int, seq_len: int,
 
             def compute_phase(state, batch, b):
                 beta_t = amb.beta(state["t"].astype(jnp.float32) + 1.0)
-                grads, _ = _local_grads(cfg, state, batch, b, beta_t,
+                sw = seq_weights_from_b(b, n * per, n).reshape(n, per)
+                grads, _ = _local_grads(cfg, state, batch, sw, beta_t,
                                         None, n, per)
                 bw = jnp.minimum(b, per).astype(jnp.float32)
                 return pack_messages(state["z"], grads, n * bw, n)
@@ -602,6 +612,153 @@ def multipod_probe(arch: str, seq_len: int) -> dict:
     return out
 
 
+def bench_churn(arch: str, steps: int, seq_len: int,
+                leave_rate: float = 0.35, rejoin_rate: float = 0.5,
+                redundancy: int = 2) -> dict:
+    """Graceful degradation under Poisson churn: coded vs uncoded.
+
+    Four runs on the 8-way host mesh sharing the same model seed, data
+    stream, and straggler draws — {no churn, Poisson churn} x {uncoded,
+    coded rho=2} — driven through ``session.run(faults=...)``, i.e. the
+    same :class:`repro.faults.FaultInjector` path a launcher uses.  The
+    interesting comparison is the *loss trajectory*: the uncoded fleet
+    loses every downed worker's shard outright (smaller, noisier
+    effective batch), while coded placement lets the surviving replica
+    holders re-cover the block with decode weights that keep the
+    gradient unbiased — so the coded churned trajectory should track
+    the no-churn baseline and the uncoded churned one should trail it.
+
+    Also reports (a) the survivor-relayout fast-path check — the
+    compiled combine for a churned ring mask must contain
+    collective-permutes and no dense dot, i.e. elastic membership never
+    falls back to ``P @ m`` on circulant graphs — and (b) the measured
+    combine time of the relayout taps vs the dense masked operator
+    (``relayout=False``) on the same survivor mask.
+    """
+    from repro.api import AMBSession, ClockSpec, ConsensusSpec, TrainSpec
+    from repro.dist import SurvivorTaps, make_strategy
+    from repro.faults import FaultInjector, PoissonChurn
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    epochs = max(steps, 12)
+    clock = ClockSpec(kind="simulated")
+    model = PoissonChurn(leave_rate=leave_rate, rejoin_rate=rejoin_rate,
+                         seed=11)
+    out: dict = {"arch": arch, "mesh": "8", "seq_len": seq_len,
+                 "epochs": epochs, "leave_rate": leave_rate,
+                 "rejoin_rate": rejoin_rate, "redundancy": redundancy,
+                 "note": "same seed/stream/straggler draws across runs; "
+                         "loss_tail = mean loss over the last half of "
+                         "the trajectory"}
+
+    def drive(label: str, rho: int, churn: bool):
+        session = AMBSession(
+            TrainSpec(arch=arch, smoke=True, seq_len=seq_len,
+                      batch_per_worker=2, data=8, redundancy=rho),
+            clock, ConsensusSpec(consensus="gossip", gossip_rounds=3))
+        injector = FaultInjector(model) if churn else None
+        losses: list = []
+        session.run(epochs, prefetch=0, faults=injector,
+                    on_step=lambda s, m: losses.append(float(m["loss"])))
+        out[label] = {
+            "losses": losses,
+            "loss_tail": sum(losses[epochs // 2:]) / (epochs - epochs // 2),
+            "sim_epoch_wall_s": session.sim_wall / epochs,
+            "membership_changes": (0 if injector is None
+                                   else injector.membership_changes)}
+        session.close()
+
+    drive("nochurn_uncoded", 1, churn=False)
+    drive("nochurn_coded", redundancy, churn=False)
+    drive("churn_uncoded", 1, churn=True)
+    drive("churn_coded", redundancy, churn=True)
+
+    # paired trajectory divergence: churned vs no-churn runs share the
+    # seed, stream, and straggler draws, so the per-step loss delta is
+    # the churn effect with batch-composition noise cancelled
+    for coding in ("uncoded", "coded"):
+        pairs = zip(out[f"churn_{coding}"]["losses"],
+                    out[f"nochurn_{coding}"]["losses"])
+        out[f"{coding}_trajectory_divergence"] = (
+            sum(abs(a - b) for a, b in pairs) / epochs)
+    out["coded_churn_excess"] = (out["churn_coded"]["loss_tail"]
+                                 - out["nochurn_coded"]["loss_tail"])
+    out["uncoded_churn_excess"] = (out["churn_uncoded"]["loss_tail"]
+                                   - out["nochurn_uncoded"]["loss_tail"])
+
+    # estimator fidelity over the same churn trajectory: the gradient
+    # estimate is the weight-w_s average of per-sample gradients, so its
+    # bias is exactly the deviation of the realized per-sample weights
+    # from the ideal all-ones coverage.  Uncoded, a downed worker's
+    # block samples get weight 0 (dropped data -> biased estimate);
+    # coded, any surviving replica holder re-covers them at weight 1.
+    from repro.dist import CodedAssignment, epoch_weights
+    n, per = 8, 2
+    asg = CodedAssignment(n, redundancy)
+    shifts, nodes = asg.shifts(per), asg.data_nodes()
+    cov = {"uncoded": [], "coded": []}
+    bias = {"uncoded": [], "coded": []}
+    for e in range(epochs):
+        active = model.fleet(e, n).active.copy()
+        if not active.any():
+            active[0] = True
+        b = jnp.asarray(np.where(active, per, 0), jnp.int32)
+        for coding, a in (("uncoded", None), ("coded", asg)):
+            sw = np.asarray(epoch_weights(b, n, per, a)[0])
+            groups = asg.groups if a is not None else n
+            block_w = np.zeros((groups, per))
+            for i in range(n):
+                g = int(nodes[i]) if a is not None else i
+                s0 = int(shifts[i]) if a is not None else 0
+                for s in range(per):
+                    block_w[g, (s + s0) % per] += sw[i, s]
+            cov[coding].append(float((block_w > 0).mean()))
+            bias[coding].append(float(np.sqrt(((block_w - 1) ** 2).mean())))
+    out["estimator_fidelity"] = {
+        "note": "per-sample weight coverage/bias of the decoded "
+                "gradient estimate under the churn masks (b_i = per "
+                "for survivors); ideal = every sample weighted 1",
+        "uncoded_coverage": sum(cov["uncoded"]) / epochs,
+        "coded_coverage": sum(cov["coded"]) / epochs,
+        "uncoded_weight_rmse": sum(bias["uncoded"]) / epochs,
+        "coded_weight_rmse": sum(bias["coded"]) / epochs,
+    }
+    fid = out["estimator_fidelity"]
+    out["coded_holds_estimate"] = bool(
+        fid["coded_coverage"] >= fid["uncoded_coverage"]
+        and fid["coded_weight_rmse"] <= fid["uncoded_weight_rmse"] + 1e-9)
+
+    # fast-path check + relayout-vs-dense combine timing on one
+    # representative churned mask (non-adjacent failures: the mask the
+    # dense induced-subgraph operator cannot even express on a ring)
+    mask = (True, True, False, True, True, False, True, True)
+    mesh = jax.make_mesh((8,), ("data",))
+    sh = NamedSharding(mesh, P("data"))
+    msgs = jax.device_put(
+        jax.random.normal(jax.random.PRNGKey(0), (8, 1 << 16)), sh)
+    fast = make_strategy("gossip", 8, rounds=3, graph="ring", active=mask)
+    assert isinstance(fast.taps, SurvivorTaps)
+    txt = jax.jit(fast.combine, in_shardings=sh, out_shardings=sh).lower(
+        jax.ShapeDtypeStruct((8, 1 << 16), jnp.float32)).compile().as_text()
+    # the dense P @ m fallback compiles to an all-gather of the full
+    # worker axis followed by a dot over it (no permutes); the tap fast
+    # path compiles to per-tap collective-permutes with no all-gather —
+    # its only dot contracts the K tap weights, not the worker axis
+    out["survivor_fast_path"] = {
+        "collective_permute_in_hlo": "collective-permute" in txt,
+        "dense_gather_in_hlo": "all-gather" in txt,
+        "taps_per_round": fast.taps.k,
+        "relayout_combine_s": _time_it(
+            jax.jit(fast.combine, in_shardings=sh, out_shardings=sh), msgs),
+    }
+    # the dense fallback needs a connected induced subgraph to exist
+    dense = make_strategy("gossip", 8, rounds=3, graph="ring",
+                          active=(True,) * 7 + (False,), relayout=False)
+    out["survivor_fast_path"]["dense_fallback_combine_s"] = _time_it(
+        jax.jit(dense.combine, in_shardings=sh, out_shardings=sh), msgs)
+    return out
+
+
 def bench_multipod(arch: str, seq_len: int) -> dict:
     """Run :func:`multipod_probe` in a clean 512-device subprocess."""
     env = dict(os.environ)
@@ -650,6 +807,7 @@ def main(argv=None) -> dict:
         "dist_async": bench_async(args.arch, args.steps, args.seq_len),
         "dist_controller": bench_controller(args.arch, args.steps,
                                             args.seq_len),
+        "dist_churn": bench_churn(args.arch, args.steps, args.seq_len),
     }
     if not args.skip_multipod:
         rec["dist_pipelined"]["multipod_2x16x16"] = bench_multipod(
@@ -688,6 +846,19 @@ def main(argv=None) -> dict:
         print(f"dist_controller_{label},"
               f"{row['sim_wall_per_epoch_s'] * 1e6:.0f},"
               f"{best_wall / row['sim_wall_per_epoch_s']:.3f}")
+    ch = rec["dist_churn"]
+    for label in ("nochurn_uncoded", "nochurn_coded", "churn_uncoded",
+                  "churn_coded"):
+        row = ch[label]
+        print(f"dist_churn_{label},{row['sim_epoch_wall_s'] * 1e6:.0f},"
+              f"{row['loss_tail']:.4f}")
+    fid = ch["estimator_fidelity"]
+    for coding in ("uncoded", "coded"):
+        print(f"dist_churn_{coding}_coverage,0,"
+              f"{fid[f'{coding}_coverage']:.4f}")
+    fp = ch["survivor_fast_path"]
+    print(f"dist_churn_relayout_combine,{fp['relayout_combine_s'] * 1e6:.0f},"
+          f"{fp['dense_fallback_combine_s'] / fp['relayout_combine_s']:.3f}")
     print(f"[ok] wrote {outdir / 'BENCH_dist.json'}")
     return rec
 

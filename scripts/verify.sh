@@ -57,6 +57,12 @@ if [[ "$smoke" == 1 ]]; then
   # jnp reference on CPU (never interpret-mode Pallas on the hot path)
   echo "== dataplane smoke: python scripts/dataplane_smoke.py =="
   python scripts/dataplane_smoke.py
+
+  # churn smoke (fast lane too): Poisson churn + coded redundancy on 8
+  # forced host devices — finite losses, survivor-relayout fast path,
+  # bit-exact save -> restore mid-churn, single-survivor identity
+  echo "== churn smoke: python scripts/churn_smoke.py =="
+  python scripts/churn_smoke.py
 fi
 
 echo "== pytest ${pytest_args[*]:-} =="

@@ -28,11 +28,18 @@ gossip, quantized-gossip, and pipelined modes:
 Elastic worker membership is first-class: ``session.set_active(mask)``
 exploits AMB's existing b_i(t) = 0 tolerance — a masked worker's
 minibatch is forced to zero (so its sequence weights vanish from the
-eq.-6 average) and the gossip taps are rebuilt on the induced active
-subgraph (:func:`repro.dist.consensus.masked_metropolis`) so remaining
-workers re-weight their surviving neighbors.  The TrainState carries
-over untouched across membership changes: a rejoining worker resumes
-from its (stale) dual replica and consensus re-mixes it in.
+eq.-6 average) and the gossip operator is rebuilt over the survivors —
+ring/torus fleets relayout onto a smaller ring/torus whose taps stay on
+the collective-permute fast path
+(:func:`repro.dist.consensus.survivor_taps`; non-circulant graphs fall
+back to the dense :func:`repro.dist.consensus.masked_metropolis`).  The
+TrainState carries over untouched across membership changes: a
+rejoining worker resumes from its (stale) dual replica and consensus
+re-mixes it in.  :meth:`run`'s ``faults=`` hook drives a
+:class:`repro.faults.FaultModel` through this machinery epoch by epoch,
+and ``TrainSpec.redundancy`` adds coded data placement so the gradient
+estimate stays unbiased while workers are down
+(:mod:`repro.dist.redundancy`).
 """
 from __future__ import annotations
 
@@ -140,6 +147,15 @@ class AMBSession:
         self.global_batch = self.n_workers * train.batch_per_worker
         self._batch_axes = tuple(a for a in ("pod", "data")
                                  if a in self.mesh.axis_names)
+        # coded redundancy: validated here (fail at construction, not in
+        # the first step) — the same CodedAssignment drives both the data
+        # placement (batch_source) and the decode weights (dist steps)
+        self._assignment = None
+        if train.redundancy > 1:
+            from ..dist.redundancy import CodedAssignment
+            self._assignment = CodedAssignment(self.n_workers,
+                                               train.redundancy)
+        self._slow: Optional[np.ndarray] = None   # fault-injected slowdowns
 
         self.clock = make_clock(self.clock_spec, self.n_workers,
                                 train.batch_per_worker)
@@ -207,7 +223,8 @@ class AMBSession:
         if key not in self._protocols:
             amb = self.consensus_spec.to_amb_config(
                 self.global_batch, self.train.seed, active=mask,
-                noise_stats=self.controller is not None)
+                noise_stats=self.controller is not None,
+                redundancy=self.train.redundancy)
             proto = build_protocol(
                 self.cfg, self.mesh, amb, optimizer=self._optimizer,
                 pipeline=self.consensus_spec.pipeline,
@@ -238,11 +255,15 @@ class AMBSession:
         ``mask`` is a length-``n_workers`` boolean sequence.  A False
         worker contributes b_i(t) = 0 every epoch (its sequence weights
         vanish — the paper's straggler-wipeout case, which AMB already
-        tolerates) and is cut out of the gossip graph; the surviving
-        workers' Metropolis weights are re-derived on the induced
-        subgraph.  The TrainState (params / dual replicas) is preserved,
-        so a later ``set_active`` that re-admits the worker resumes it
-        from its stale dual and lets consensus pull it back in.
+        tolerates) and is cut out of the gossip graph; ring/torus
+        fleets re-lay the survivors onto a smaller ring/torus (taps
+        stay collective-permutes), other graphs re-derive dense
+        Metropolis weights on the induced subgraph.  A single survivor
+        degenerates to identity consensus; an all-inactive mask is
+        rejected before any state is touched.  The TrainState (params /
+        dual replicas) is preserved, so a later ``set_active`` that
+        re-admits the worker resumes it from its stale dual and lets
+        consensus pull it back in.
 
         In-flight consensus is **drained first** (pipelined / async
         modes): a queued payload was packed for the *old* membership's
@@ -265,6 +286,28 @@ class AMBSession:
         # session unchanged (modulo the always-valid drain above)
         self._build_protocol(active)
         self._active = active
+
+    def set_slowdown(self, slow) -> None:
+        """Pin per-worker slowdown multipliers on the clock draws.
+
+        ``slow`` is a length-``n_workers`` sequence of per-gradient-time
+        multipliers (or None to clear): each epoch's straggler-model
+        draws are scaled per worker *before* the deadline cut, so a
+        fail-slow worker's b_i(t) shrinks through the paper's own
+        variable-minibatch mechanism — no special-casing downstream.
+        Composes multiplicatively with the configured
+        :class:`repro.core.stragglers.StragglerModel`.
+        """
+        if slow is None:
+            self._slow = None
+            return
+        slow = np.asarray(slow, dtype=np.float64).reshape(-1)
+        if slow.shape[0] != self.n_workers:
+            raise ValueError(f"slowdown has {slow.shape[0]} entries for "
+                             f"{self.n_workers} workers")
+        if (slow <= 0).any():
+            raise ValueError("slowdown multipliers must be positive")
+        self._slow = None if np.all(slow == 1.0) else slow
 
     # -- the epoch ---------------------------------------------------------
 
@@ -291,6 +334,12 @@ class AMBSession:
         with use_sharding(self.mesh):
             skey = jax.random.fold_in(self._key, 10_000 + self.steps_done)
             times, budget = self.clock.epoch(skey)
+            if self._slow is not None:
+                # fault-injected degradation: scale each worker's
+                # per-gradient times; the deadline cut below turns the
+                # slowdown into a smaller b_i(t) automatically
+                times = times * jnp.asarray(self._slow,
+                                            times.dtype)[:, None]
             if b is None:
                 b = self.epoch_sizes(times, budget)
             # simulated wall clock: pipelined epochs hide T_c under the
@@ -341,15 +390,19 @@ class AMBSession:
         """The session's default input: per-worker shards of the arch's
         LM token stream (worker i draws stream node i — distinct i.i.d.
         shards, deterministic in (seed, node, epoch) so restores resume
-        the exact remaining stream)."""
+        the exact remaining stream).  Under coded redundancy the
+        session's :class:`repro.dist.redundancy.CodedAssignment` places
+        rotated copies of each group's block instead (group members
+        share a stream node)."""
         return StreamSource(
             LMTokenStream(vocab_size=self.cfg.vocab_size,
                           seq_len=self.train.seq_len,
                           seed=self.train.seed),
-            self.n_workers, self.train.batch_per_worker)
+            self.n_workers, self.train.batch_per_worker,
+            assignment=self._assignment)
 
     def run(self, steps: int, source=None, *, prefetch: int = 2,
-            on_step=None) -> Optional[dict]:
+            on_step=None, faults=None) -> Optional[dict]:
         """Run ``steps`` epochs fed by ``source`` through the prefetched
         data plane; returns the last epoch's metrics (None at 0 steps).
 
@@ -363,14 +416,32 @@ class AMBSession:
         baseline (build, put, then step — the pre-dataplane behavior,
         kept for A/B timing).  ``on_step(step, metrics)`` is called
         after every epoch with the session's absolute step counter.
+
+        ``faults`` is a :class:`repro.faults.FaultModel` (or a prebuilt
+        :class:`repro.faults.FaultInjector`) applied *before* each
+        epoch: membership changes go through :meth:`set_active` (which
+        drains any in-flight async consensus first), slowdowns through
+        :meth:`set_slowdown`.  The fault trajectory is a pure function
+        of the epoch index, so a restored session under the same model
+        replays it exactly.  Note the data plane keeps over-provisioning
+        every worker's slots — a downed worker's samples are simply
+        zero-weighted (or, under coded redundancy, re-covered by its
+        group peers).
         """
         if steps <= 0:
             return None
         if source is None:
             source = self.batch_source()
+        injector = None
+        if faults is not None:
+            from ..faults import FaultInjector
+            injector = faults if isinstance(faults, FaultInjector) \
+                else FaultInjector(faults)
         out = None
         if prefetch < 1:
             for epoch in range(self.steps_done, self.steps_done + steps):
+                if injector is not None:
+                    injector.apply(self, epoch)
                 out = self.step(source.batch(epoch))
                 if on_step is not None:
                     on_step(self.steps_done, out)
@@ -380,6 +451,10 @@ class AMBSession:
                         steps=steps)
         try:
             for batch in pf:
+                # the prefetcher yields epochs in order from steps_done,
+                # so the incoming batch's epoch IS the current counter
+                if injector is not None:
+                    injector.apply(self, self.steps_done)
                 out = self.step(batch)
                 if on_step is not None:
                     on_step(self.steps_done, out)

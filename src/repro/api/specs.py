@@ -83,6 +83,10 @@ class TrainSpec(_Spec):
                                       # | pallas_interpret (repro.kernels.
                                       # router; auto = Pallas on TPU/GPU,
                                       # jnp ref on CPU)
+    redundancy: int = 1               # rho: coded data replication factor
+                                      # (repro.dist.redundancy — groups of
+                                      # rho workers share rotated copies of
+                                      # one data block; 1 = uncoded)
 
     @staticmethod
     def add_cli_args(ap: argparse.ArgumentParser) -> None:
@@ -107,6 +111,14 @@ class TrainSpec(_Spec):
                              "Pallas on TPU/GPU and the jnp reference on "
                              "CPU (interpret mode never runs on the hot "
                              "path unless forced)")
+        ap.add_argument("--redundancy", type=int,
+                        default=TrainSpec.redundancy,
+                        help="coded data replication factor rho (must "
+                             "divide the worker count): groups of rho "
+                             "workers hold rotated copies of one data "
+                             "block and decode-on-settle weights keep the "
+                             "gradient estimate unbiased under worker "
+                             "loss; 1 = uncoded")
 
     @classmethod
     def from_args(cls, args: argparse.Namespace) -> "TrainSpec":
@@ -114,7 +126,9 @@ class TrainSpec(_Spec):
                    batch_per_worker=args.batch_per_worker, data=args.data,
                    model=args.model, pod=args.pod, optimizer=args.optimizer,
                    mode=args.mode, seed=args.seed,
-                   kernels=getattr(args, "kernels", TrainSpec.kernels))
+                   kernels=getattr(args, "kernels", TrainSpec.kernels),
+                   redundancy=getattr(args, "redundancy",
+                                      TrainSpec.redundancy))
 
 
 # ---------------------------------------------------------------------------
@@ -218,14 +232,16 @@ class ConsensusSpec(_Spec):
 
     def to_amb_config(self, global_batch: int, seed: int = 0,
                       active: Optional[tuple] = None,
-                      noise_stats: bool = False):
+                      noise_stats: bool = False, redundancy: int = 1,
+                      relayout: bool = True):
         """The dist-layer :class:`repro.dist.amb.AMBConfig` equivalent."""
         from ..dist.amb import AMBConfig
         return AMBConfig(consensus=self.consensus,
                          gossip_rounds=self.gossip_rounds, graph=self.graph,
                          torus_shape=self.torus_shape, lazy=self.lazy,
                          beta=self.beta(global_batch), radius=self.radius,
-                         seed=seed, active=active, noise_stats=noise_stats)
+                         seed=seed, active=active, noise_stats=noise_stats,
+                         redundancy=redundancy, relayout=relayout)
 
     @staticmethod
     def add_cli_args(ap: argparse.ArgumentParser) -> None:

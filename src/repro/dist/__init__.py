@@ -24,8 +24,16 @@ Layered modules (bottom up):
     ``QuantizedGossipConsensus`` (CHOCO-style 8/4-bit delta compression,
     fused stochastic-quantize + combine kernels, barrier-pinned uint8
     wire planes); ``make_strategy`` is the factory, and an ``active``
-    worker mask rebuilds the operator on the induced subgraph
-    (``masked_metropolis``) for elastic membership.
+    worker mask rebuilds the operator over the survivors for elastic
+    membership — re-laid-out onto a smaller ring/torus so churned steps
+    stay on the tap/collective-permute fast path (``survivor_taps``),
+    with the dense ``masked_metropolis`` operator as the fallback for
+    arbitrary graphs.
+  * :mod:`repro.dist.redundancy` — ``CodedAssignment``: coded data
+    placement (fractional-repetition groups with rotated replicas) and
+    ``epoch_weights``, the decode-on-settle sequence weights that keep
+    the fleet's gradient estimate unbiased when replica holders die or
+    straggle (each covered sample totals weight one across survivors).
   * :mod:`repro.dist.amb` — the paper's epoch update as SPMD train
     steps: ``make_train_step`` (exact consensus, any optimizer) and
     ``make_gossip_train_step`` (per-worker dual replicas, any strategy),
@@ -49,9 +57,11 @@ from .sharding import active_mesh, constrain, use_sharding   # noqa: F401
 from .params import param_spec, tree_shardings               # noqa: F401
 from .consensus import (ConsensusStrategy, ExactConsensus,   # noqa: F401
                         GossipConsensus, QuantizedGossipConsensus,
-                        make_strategy, masked_metropolis,
-                        torus_shape_for_mesh)
-from .amb import (AMBConfig, gossip_primal,                  # noqa: F401
+                        SurvivorTaps, make_strategy, masked_metropolis,
+                        survivor_taps, torus_shape_for_mesh)
+from .redundancy import CodedAssignment, epoch_weights       # noqa: F401
+from .amb import (AMBConfig, assignment_from_config,         # noqa: F401
+                  gossip_primal,
                   make_gossip_train_step, make_train_step, num_workers,
                   pack_messages, ring_gossip, seq_weights_from_b,
                   strategy_from_config, unpack_duals, worker_axes)
@@ -60,9 +70,12 @@ from .async_epochs import make_async_gossip_train_step       # noqa: F401
 
 __all__ = [
     "active_mesh", "constrain", "use_sharding", "param_spec",
-    "tree_shardings", "ConsensusStrategy", "ExactConsensus",
-    "GossipConsensus", "QuantizedGossipConsensus", "make_strategy",
-    "masked_metropolis", "torus_shape_for_mesh", "AMBConfig",
+    "tree_shardings", "CodedAssignment", "ConsensusStrategy",
+    "ExactConsensus",
+    "GossipConsensus", "QuantizedGossipConsensus", "SurvivorTaps",
+    "make_strategy",
+    "masked_metropolis", "survivor_taps", "torus_shape_for_mesh",
+    "AMBConfig", "assignment_from_config", "epoch_weights",
     "gossip_primal",
     "make_async_gossip_train_step", "make_gossip_train_step",
     "make_pipelined_gossip_train_step",

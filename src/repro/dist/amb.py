@@ -42,6 +42,7 @@ from ..core import consensus as cns
 from ..core.dual_averaging import BetaSchedule
 from .consensus import (ConsensusStrategy, GossipConsensus, make_strategy,
                         torus_shape_for_mesh)
+from .redundancy import CodedAssignment, epoch_weights
 
 Array = jax.Array
 
@@ -66,6 +67,13 @@ class AMBConfig:
                                       # (repro.control telemetry); opt-in so
                                       # default step graphs stay byte-
                                       # identical
+    redundancy: int = 1               # rho: coded data replication factor
+                                      # (repro.dist.redundancy; 1 = uncoded,
+                                      # bit-exact legacy path)
+    relayout: bool = True             # elastic membership phase 2: re-lay
+                                      # the survivors onto a smaller ring/
+                                      # torus (taps stay collective-permute)
+                                      # instead of the dense masked P @ m
 
 
 def strategy_from_config(amb: AMBConfig, mesh) -> ConsensusStrategy:
@@ -76,7 +84,15 @@ def strategy_from_config(amb: AMBConfig, mesh) -> ConsensusStrategy:
         tshape = torus_shape_for_mesh(mesh)
     return make_strategy(amb.consensus, n, rounds=amb.gossip_rounds,
                          graph=amb.graph, lazy=amb.lazy, torus_shape=tshape,
-                         active=amb.active)
+                         active=amb.active, relayout=amb.relayout)
+
+
+def assignment_from_config(amb: AMBConfig, n: int
+                           ) -> Optional[CodedAssignment]:
+    """The coded data placement, or None for the uncoded bit-exact path."""
+    if amb.redundancy <= 1:
+        return None
+    return CodedAssignment(n, amb.redundancy)
 
 
 # ---------------------------------------------------------------------------
@@ -194,15 +210,24 @@ def make_train_step(cfg, opt, mesh, amb: AMBConfig = AMBConfig()):
     axes); ``b`` the (n_workers,) per-worker minibatch sizes for this
     epoch.  The weighted loss's gradient equals the paper's eq.-6 global
     gradient, and ``opt`` applies the update (dual averaging: z += g,
-    w = prox(z, beta)).
+    w = prox(z, beta)).  Under coded redundancy (``amb.redundancy > 1``)
+    the 0/1 eq.-3 weights become the ``1/copies`` decode weights of
+    :mod:`repro.dist.redundancy` and ``global_batch`` counts *distinct*
+    covered samples.
     """
     from ..models import lm_loss     # deferred: models imports dist.sharding
     n = num_workers(mesh)
+    assignment = assignment_from_config(amb, n)
 
     def step(params, opt_state, batch, b):
         gb = jax.tree.leaves(batch)[0].shape[0]
         per = gb // n
-        sw = seq_weights_from_b(b, gb, n)
+        if assignment is None:
+            sw = seq_weights_from_b(b, gb, n)
+            gbatch = jnp.sum(jnp.minimum(b, per))
+        else:
+            sw2, bw = epoch_weights(b, n, per, assignment)
+            sw, gbatch = sw2.reshape(gb), bw.sum()
 
         def loss_fn(p):
             total, m = lm_loss(p, cfg, batch, sw)
@@ -211,7 +236,7 @@ def make_train_step(cfg, opt, mesh, amb: AMBConfig = AMBConfig()):
         (_, m), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
         new_params, new_state = opt.apply(grads, opt_state, params)
         metrics = {"loss": m["loss"], "aux": m["aux"], "ntok": m["ntok"],
-                   "global_batch": jnp.sum(jnp.minimum(b, per))}
+                   "global_batch": gbatch}
         return new_params, new_state, metrics
 
     return step
@@ -232,13 +257,15 @@ def _prox_leaf(z_leaf, w0_leaf, beta_t, radius: Optional[float]):
     return w.astype(w0_leaf.dtype)
 
 
-def _local_grads(cfg, state, batch, b, beta_t, radius, n, per):
+def _local_grads(cfg, state, batch, sw, beta_t, radius, n, per):
     """vmapped per-worker masked gradients at each worker's own primal.
 
-    Returns (grads tree of (n, *param), losses (n,)).
+    ``sw``: (n, per) per-sequence weights — the 0/1 eq.-3 mask, or the
+    fractional ``1/copies`` decode weights under coded redundancy
+    (:func:`repro.dist.redundancy.epoch_weights`).  Returns (grads tree
+    of (n, *param), losses (n,)).
     """
     from ..models import lm_loss     # deferred: models imports dist.sharding
-    sw = seq_weights_from_b(b, n * per, n).reshape(n, per)
     local = jax.tree.map(
         lambda x: x.reshape((n, per) + x.shape[1:]), batch)
 
@@ -310,6 +337,7 @@ def make_gossip_train_step(cfg, mesh, amb: AMBConfig):
     waxes = worker_axes(mesh)
     beta, radius = amb.beta, amb.radius
     strategy = strategy_from_config(amb, mesh)
+    assignment = assignment_from_config(amb, n)
     qkey = jax.random.PRNGKey(amb.seed)
 
     def init_state(params):
@@ -320,10 +348,10 @@ def make_gossip_train_step(cfg, mesh, amb: AMBConfig):
         per = gb // n
         t = state["t"]
         beta_t = beta(t.astype(jnp.float32) + 1.0)   # beta used for w(t)
-        grads, losses = _local_grads(cfg, state, batch, b, beta_t, radius,
+        sw, bw = epoch_weights(b, n, per, assignment)
+        grads, losses = _local_grads(cfg, state, batch, sw, beta_t, radius,
                                      n, per)
 
-        bw = jnp.minimum(b, per).astype(jnp.float32)
         msg = pack_messages(state["z"], grads, n * bw, n)
         out = strategy.combine(msg, key=jax.random.fold_in(qkey, t))
         z_new = unpack_duals(out, state["z"], n)

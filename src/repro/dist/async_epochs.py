@@ -63,7 +63,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from .amb import (AMBConfig, _init_gossip_state, _local_grads, flatten_dual,
+from .amb import (AMBConfig, _init_gossip_state, _local_grads,
+                  assignment_from_config, epoch_weights, flatten_dual,
                   grad_noise_stats, num_workers, pack_messages,
                   strategy_from_config, unflatten_dual, unpack_duals,
                   worker_axes)
@@ -96,6 +97,7 @@ def make_async_gossip_train_step(cfg, mesh, amb: AMBConfig,
     waxes = worker_axes(mesh)
     beta, radius = amb.beta, amb.radius
     strategy = strategy_from_config(amb, mesh)
+    assignment = assignment_from_config(amb, n)
     qkey = jax.random.PRNGKey(amb.seed)
     D = staleness
     gamma = 1.0 if D == 1 else 1.0 / (2.0 * D)   # delayed-mixing damping
@@ -147,13 +149,13 @@ def make_async_gossip_train_step(cfg, mesh, amb: AMBConfig,
         z_new = _settle(state["z"], state["queue"][0], snap0, t - D)
 
         # (2) fwd/bwd at the last settled primal prox(z) — staleness D.
-        grads, losses = _local_grads(cfg, state, batch, b, beta_t, radius,
+        sw, bw = epoch_weights(b, n, per, assignment)
+        grads, losses = _local_grads(cfg, state, batch, sw, beta_t, radius,
                                      n, per)
 
         # (3) enqueue this epoch's payload on the freshly settled dual
         # (gamma-damped dual term; gamma = 1 reproduces the sequential
         # wire format at D = 1).
-        bw = jnp.minimum(b, per).astype(jnp.float32)
         z_pack = z_new if D == 1 else jax.tree.map(lambda zl: gamma * zl,
                                                    z_new)
         pending = pack_messages(z_pack, grads, n * bw, n)

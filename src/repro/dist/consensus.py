@@ -30,6 +30,15 @@ workers agree:
 :func:`make_strategy` builds the right strategy from an
 :class:`repro.dist.amb.AMBConfig` plus the mesh (the torus shape defaults
 to the physical worker-axis extents).
+
+Elastic membership (worker churn) has two regimes.  Ring/torus fleets
+**relayout**: the survivors are re-enumerated onto a smaller ring/torus
+whose operator is circulant again, so every round stays on the
+collective-permute + fused-combine fast path — including the uint8
+quantized wire planes (:class:`SurvivorTaps`).  Non-circulant graphs
+(and ``relayout=False``) fall back to the dense induced-subgraph
+operator of :func:`masked_metropolis`.  A single survivor degenerates
+to the identity; an all-inactive mask is rejected.
 """
 from __future__ import annotations
 
@@ -67,6 +76,10 @@ class Taps:
     @property
     def k(self) -> int:
         return len(self.offsets)
+
+    def take(self, x: Array, i: int) -> Array:
+        """The i-th tap's neighbor view: ``out[r] = x[r + offsets[i]]``."""
+        return roll_by_offset(x, self, self.offsets[i])
 
 
 def group_taps(p: np.ndarray, shape: Sequence[int]) -> Optional[Taps]:
@@ -116,6 +129,13 @@ def masked_metropolis(adj: np.ndarray, active, lazy: float) -> np.ndarray:
     become identity rows (they neither send nor relay; their stale dual
     survives untouched until they rejoin).  The active subgraph must stay
     connected — a partitioned fleet cannot reach consensus.
+
+    This is the *dense* membership operator — ``P @ m`` per round.  It
+    remains the fallback for non-circulant graphs (and the
+    ``relayout=False`` A/B baseline); ring/torus fleets normally take
+    :func:`survivor_taps` instead, which reconnects the survivors on a
+    fresh ring/torus (so non-adjacent failures never partition it) and
+    keeps the collective-permute fast path.
     """
     active = np.asarray(active, dtype=bool)
     adj = np.asarray(adj, dtype=bool) & active[None, :] & active[:, None]
@@ -133,9 +153,149 @@ def roll_by_offset(x: Array, taps: Taps, off) -> Array:
     return jnp.roll(full, tuple(-o for o in off), axis=axes).reshape(x.shape)
 
 
-def _roll_taps(m: Array, taps: Taps) -> Array:
-    """Stack the rolled neighbor views: (K, n, ...) from (n, ...)."""
-    return jnp.stack([roll_by_offset(m, taps, off) for off in taps.offsets])
+# ---------------------------------------------------------------------------
+# Survivor relayout (elastic membership phase 2)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SurvivorTaps:
+    """Tap decomposition of a *survivor-relayout* gossip operator.
+
+    :func:`masked_metropolis` keeps the survivors on the physical graph's
+    induced subgraph — which loses the group-circulant structure the roll
+    taps need (and can even disconnect), forcing the dense ``P @ m``
+    slow path whenever a worker is down.  Relayout instead re-enumerates
+    the ``n_act`` survivors (by physical index) as ranks of a *fresh*
+    ring / torus over ``Z_{n_act}``: the small operator is circulant
+    again, so it tap-decomposes, and each survivor-rank offset becomes a
+    small set of **physical** worker-axis rolls — rank r's tap-``i``
+    neighbor sits ``delta = p_{r+o_i} - p_r (mod n)`` physical slots
+    away, and survivors with equal ``delta`` share one roll.  ``take``
+    therefore lowers to at most a handful of collective-permutes plus
+    masked selects per tap, keeping churned fleets on the fast path (and
+    on the uint8 wire planes: the rolls work on any dtype).
+
+    Fields: ``offsets`` / ``weights`` / ``shape`` describe the small
+    operator on survivor ranks (self tap first, ``prod(shape) ==
+    n_act``); ``hops[i]`` is the physical realisation of tap i — a tuple
+    of ``(delta, mask)`` pairs with disjoint (n,) bool masks selecting
+    which physical rows read from ``delta`` slots ahead; ``active`` is
+    the membership mask, ``n`` the full fleet size.  Inactive rows are
+    identity rows (their stale dual survives until rejoin) — the
+    strategies re-select them after the combine.
+    """
+
+    offsets: tuple            # survivor-rank offsets, self tap first
+    weights: np.ndarray       # (K,) float32
+    shape: tuple              # survivor group shape, prod == n_act
+    hops: tuple               # per tap: ((delta, (n,) bool mask), ...)
+    active: np.ndarray        # (n,) bool membership mask
+    n: int                    # full fleet size
+
+    @property
+    def k(self) -> int:
+        return len(self.offsets)
+
+    def take(self, x: Array, i: int) -> Array:
+        """Tap i's neighbor view on the *physical* axis.
+
+        Row ``p`` of the result holds ``x[p + delta_p]`` for active rows
+        (``delta_p`` from the rank relayout) and 0 for inactive rows —
+        the hop masks are disjoint, so the masked rolls just sum.  Works
+        for any dtype (fp32 payloads and uint8 wire planes alike).
+        """
+        if i == 0:
+            return x
+        out = None
+        for delta, mask in self.hops[i]:
+            m = jnp.asarray(mask).reshape((self.n,) + (1,) * (x.ndim - 1))
+            rolled = jnp.roll(x, -delta, axis=0) if delta else x
+            part = jnp.where(m, rolled, jnp.zeros((), x.dtype))
+            out = part if out is None else out + part
+        return out if out is not None else jnp.zeros_like(x)
+
+    def dense(self) -> np.ndarray:
+        """The (n, n) operator this realises (tests / spectral checks):
+        the relayout P on the survivor block, identity rows elsewhere."""
+        p = np.zeros((self.n, self.n))
+        idx = np.arange(self.n)
+        for w, hop in zip(self.weights, self.hops):
+            for delta, mask in hop:
+                rows = idx[mask]
+                p[rows, (rows + delta) % self.n] += float(w)
+        inact = ~np.asarray(self.active, bool)
+        p[inact, idx[inact]] = 1.0
+        return p
+
+
+def survivor_taps(active, graph: str = "ring", lazy: float = 0.5
+                  ) -> Optional[SurvivorTaps]:
+    """Relayout the active set onto a fresh ring/torus; None if the tap
+    form is unavailable (< 2 survivors, or a non-circulant relayout).
+
+    The survivor count picks the relayout shape: a ring over the
+    ``n_act`` survivors, or — when the original graph was a torus and
+    ``n_act`` factors into a true 2-D torus — the most-square
+    ``rows x cols`` torus.  The construction is validated by rebuilding
+    the dense operator and comparing against the embedded small P.
+    """
+    act = np.asarray(active, dtype=bool)
+    n = act.size
+    surv = np.nonzero(act)[0]
+    n_act = surv.size
+    if n_act < 2:
+        return None
+    if graph == "torus":
+        rows, cols = _default_torus(n_act)
+        if rows >= 2 and cols >= 2:
+            shape, adj = (rows, cols), cns.torus_graph(rows, cols)
+        else:                       # prime / tiny survivor counts: ring
+            shape, adj = (n_act,), cns.ring_graph(n_act)
+    elif graph == "ring":
+        shape, adj = (n_act,), cns.ring_graph(n_act)
+    else:
+        return None
+    p_small = cns.metropolis_weights(adj, lazy=lazy)
+    taps_small = group_taps(p_small, shape)
+    if taps_small is None:
+        return None
+    coords = np.stack(np.unravel_index(np.arange(n_act), shape), axis=1)
+    hops = []
+    for off in taps_small.offsets:
+        src_rank = np.ravel_multi_index(
+            tuple((coords[:, a] + off[a]) % shape[a]
+                  for a in range(len(shape))), shape)
+        delta = (surv[src_rank] - surv) % n       # physical roll per rank
+        tap_hops = []
+        for d in sorted({int(x) for x in delta}):
+            mask = np.zeros(n, dtype=bool)
+            mask[surv[delta == d]] = True
+            tap_hops.append((d, mask))
+        hops.append(tuple(tap_hops))
+    taps = SurvivorTaps(offsets=taps_small.offsets,
+                        weights=taps_small.weights, shape=shape,
+                        hops=tuple(hops), active=act.copy(), n=n)
+    # validate: the physical realisation must equal the embedded small P
+    emb = np.eye(n)
+    emb[np.ix_(surv, surv)] = p_small
+    if not np.allclose(taps.dense(), emb, atol=1e-12):
+        return None
+    return taps
+
+
+def _mask_rows(out: Array, orig: Array, active) -> Array:
+    """Re-select inactive workers' original rows (identity rows) after a
+    survivor-tap combine; no-op for full-fleet operators."""
+    if active is None:
+        return out
+    mask = jnp.asarray(np.asarray(active, bool)).reshape(
+        (-1,) + (1,) * (out.ndim - 1))
+    return jnp.where(mask, out, orig)
+
+
+def _roll_taps(m: Array, taps) -> Array:
+    """Stack the neighbor views: (K, n, ...) from (n, ...)."""
+    return jnp.stack([taps.take(m, i) for i in range(taps.k)])
 
 
 # ---------------------------------------------------------------------------
@@ -179,15 +339,26 @@ class ExactConsensus(ConsensusStrategy):
 
 
 class _TapGossip(ConsensusStrategy):
-    """Shared P/tap construction for the gossip strategies."""
+    """Shared P/tap construction for the gossip strategies.
+
+    Elastic membership: an ``active`` mask with >= 2 survivors on a
+    ring/torus relays out via :func:`survivor_taps` (collective-permute
+    fast path preserved; ``relayout=False`` forces the legacy dense
+    :func:`masked_metropolis` operator for A/B benchmarking).  A single
+    survivor degenerates to the identity (no permutes, no dense op);
+    an all-inactive mask is rejected — there is no operator to build.
+    """
 
     def __init__(self, n: int, rounds: int, graph: str = "ring",
                  lazy: float = 0.5, torus_shape: Optional[tuple] = None,
-                 active: Optional[Sequence[bool]] = None):
+                 active: Optional[Sequence[bool]] = None,
+                 relayout: bool = True):
         self.n = int(n)
         self.rounds = int(rounds)
         self.graph = graph
         self.lazy = float(lazy)
+        self.relayout = bool(relayout)
+        self.identity = False
         self.active = None if active is None or all(active) \
             else tuple(bool(a) for a in active)
         if n < 2:
@@ -206,7 +377,24 @@ class _TapGossip(ConsensusStrategy):
             if len(self.active) != n:
                 raise ValueError(f"active mask has {len(self.active)} "
                                  f"entries for {n} workers")
-            # masked P is not group-circulant: run the dense operator
+            n_act = sum(self.active)
+            if n_act == 0:
+                raise ValueError("at least one worker must stay active; "
+                                 "an all-inactive fleet has no consensus "
+                                 "operator")
+            if n_act == 1:
+                # single survivor: consensus degenerates to the identity
+                # — no permutes, no dense operator, dual untouched
+                self.identity = True
+                self.p, self.taps = np.eye(n), None
+                return
+            if self.relayout:
+                self.taps = survivor_taps(self.active, graph, lazy)
+                if self.taps is not None:
+                    self.p = self.taps.dense()
+                    return
+            # dense fallback: masked Metropolis on the induced subgraph
+            # (non-circulant graphs, or relayout explicitly disabled)
             self.p = masked_metropolis(adj, self.active, lazy)
             self.taps = None
         else:
@@ -231,7 +419,7 @@ class GossipConsensus(_TapGossip):
 
     def combine(self, msg: Array, key: Optional[Array] = None) -> Array:
         m = msg.astype(jnp.float32)
-        if self.n < 2 or self.rounds < 1:
+        if self.n < 2 or self.rounds < 1 or self.identity:
             return m
         if self.taps is None:        # dense fallback (non-circulant graph)
             return cns.gossip(m, jnp.asarray(self.p, jnp.float32),
@@ -244,7 +432,11 @@ class GossipConsensus(_TapGossip):
                 stacked.reshape(self.taps.k, -1), w)
             return out.reshape(cur.shape)
 
-        return jax.lax.fori_loop(0, self.rounds, one_round, m)
+        out = jax.lax.fori_loop(0, self.rounds, one_round, m)
+        # survivor relayout: inactive workers keep their rows (identity);
+        # no active row ever reads an inactive one, so one final select
+        # equals the dense masked operator's per-round identity rows
+        return _mask_rows(out, m, getattr(self.taps, "active", None))
 
 
 class QuantizedGossipConsensus(_TapGossip):
@@ -267,8 +459,10 @@ class QuantizedGossipConsensus(_TapGossip):
     def __init__(self, n: int, rounds: int, bits: int = 8,
                  graph: str = "ring", lazy: float = 0.5,
                  torus_shape: Optional[tuple] = None,
-                 active: Optional[Sequence[bool]] = None):
-        super().__init__(n, rounds, graph, lazy, torus_shape, active)
+                 active: Optional[Sequence[bool]] = None,
+                 relayout: bool = True):
+        super().__init__(n, rounds, graph, lazy, torus_shape, active,
+                         relayout)
         if bits not in (4, 8):
             raise ValueError("bits must be 4 or 8 (uint8 wire container)")
         self.bits = int(bits)
@@ -301,7 +495,7 @@ class QuantizedGossipConsensus(_TapGossip):
         if key is None:
             raise ValueError("QuantizedGossipConsensus needs a PRNG key")
         m = msg.astype(jnp.float32)
-        if self.n < 2 or self.rounds < 1:
+        if self.n < 2 or self.rounds < 1 or self.identity:
             return m
         # the fused path needs the self tap first (w[0] multiplies m)
         if self.taps is None or any(self.taps.offsets[0]):
@@ -313,7 +507,6 @@ class QuantizedGossipConsensus(_TapGossip):
         d = m.shape[1]
         w = jnp.asarray(taps.weights)
         km1 = taps.k - 1
-        nbr_offsets = taps.offsets[1:]
 
         def one_round(k_round, carry):
             cur, h, hnbr = carry
@@ -340,13 +533,11 @@ class QuantizedGossipConsensus(_TapGossip):
             wire = jax.lax.optimization_barrier(self._pack(lvl))
             lvl_r = jnp.stack([
                 self._unpack(
-                    jax.lax.optimization_barrier(
-                        roll_by_offset(wire, taps, o)), d)
-                for o in nbr_offsets])
-            lo_r = jnp.stack([roll_by_offset(lo, taps, o)
-                              for o in nbr_offsets])
-            sc_r = jnp.stack([roll_by_offset(scale, taps, o)
-                              for o in nbr_offsets])
+                    jax.lax.optimization_barrier(taps.take(wire, j)), d)
+                for j in range(1, taps.k)])
+            lo_r = jnp.stack([taps.take(lo, j) for j in range(1, taps.k)])
+            sc_r = jnp.stack([taps.take(scale, j)
+                              for j in range(1, taps.k)])
             # -- receive half: fused dequantize + replica update + combine
             out, hnbr_new = kops.quantized_combine(
                 cur, hnbr, lvl_r, lo_r, sc_r, w)
@@ -356,7 +547,10 @@ class QuantizedGossipConsensus(_TapGossip):
         hnbr0 = jnp.zeros((km1,) + m.shape, jnp.float32)
         out, _, _ = jax.lax.fori_loop(0, self.rounds, one_round,
                                       (m, h0, hnbr0))
-        return out
+        # survivor relayout: restore inactive workers' original rows —
+        # their replicas only ever accumulate the taps' zero fill, and
+        # no active row reads them, so the select is exact
+        return _mask_rows(out, m, getattr(self.taps, "active", None))
 
 
 # ---------------------------------------------------------------------------
@@ -390,24 +584,30 @@ CONSENSUS_CHOICES = ("exact", "gossip", "gossip_q8", "gossip_q4")
 def make_strategy(name: str, n: int, *, rounds: int = 5,
                   graph: str = "ring", lazy: float = 0.5,
                   torus_shape: Optional[tuple] = None,
-                  active: Optional[Sequence[bool]] = None
-                  ) -> ConsensusStrategy:
+                  active: Optional[Sequence[bool]] = None,
+                  relayout: bool = True) -> ConsensusStrategy:
     """Build a strategy from the AMBConfig vocabulary.
 
     ``name`` in {"exact", "gossip", "gossip_q8", "gossip_q4"}.  Quantized
     strategies get (32/bits)x the rounds — same T_c byte budget.  An
     ``active`` worker mask (elastic membership) rebuilds the gossip
-    operator on the induced subgraph via :func:`masked_metropolis`;
-    exact consensus needs no rebuild — a departed worker's zero-weighted
-    message (b_i = 0) already drops out of the eq.-6 average.
+    operator: ring/torus fleets relayout the survivors onto a smaller
+    ring/torus whose taps stay on the collective-permute fast path
+    (:func:`survivor_taps`; ``relayout=False`` forces the legacy dense
+    :func:`masked_metropolis` operator), non-circulant graphs take the
+    dense induced-subgraph operator.  Exact consensus needs no rebuild —
+    a departed worker's zero-weighted message (b_i = 0) already drops
+    out of the eq.-6 average.
     """
     if name == "exact":
         return ExactConsensus(n)
     if name == "gossip":
-        return GossipConsensus(n, rounds, graph, lazy, torus_shape, active)
+        return GossipConsensus(n, rounds, graph, lazy, torus_shape, active,
+                               relayout)
     if name in ("gossip_q8", "gossip_q4"):
         bits = int(name[-1])
         return QuantizedGossipConsensus(n, rounds * 32 // bits, bits,
-                                        graph, lazy, torus_shape, active)
+                                        graph, lazy, torus_shape, active,
+                                        relayout)
     raise ValueError(f"unknown consensus strategy {name!r}; "
                      f"choose from {CONSENSUS_CHOICES}")

@@ -33,8 +33,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from .amb import (AMBConfig, _init_gossip_state, _local_grads,
-                  grad_noise_stats, num_workers, pack_messages,
-                  strategy_from_config, unpack_duals, worker_axes)
+                  assignment_from_config, epoch_weights, grad_noise_stats,
+                  num_workers, pack_messages, strategy_from_config,
+                  unpack_duals, worker_axes)
 
 Array = jax.Array
 
@@ -62,6 +63,7 @@ def make_pipelined_gossip_train_step(cfg, mesh, amb: AMBConfig):
     waxes = worker_axes(mesh)
     beta, radius = amb.beta, amb.radius
     strategy = strategy_from_config(amb, mesh)
+    assignment = assignment_from_config(amb, n)
     qkey = jax.random.PRNGKey(amb.seed)
 
     def init_state(params):
@@ -98,11 +100,11 @@ def make_pipelined_gossip_train_step(cfg, mesh, amb: AMBConfig):
         z_new = _settle(state)
 
         # (2) fwd/bwd at the stale primal prox(z(t-1)) — staleness 1.
-        grads, losses = _local_grads(cfg, state, batch, b, beta_t, radius,
+        sw, bw = epoch_weights(b, n, per, assignment)
+        grads, losses = _local_grads(cfg, state, batch, sw, beta_t, radius,
                                      n, per)
 
         # (3) enqueue this epoch's message on the freshly agreed dual.
-        bw = jnp.minimum(b, per).astype(jnp.float32)
         pending = pack_messages(z_new, grads, n * bw, n)
 
         bsum = jnp.maximum(bw.sum(), 1.0)

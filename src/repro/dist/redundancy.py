@@ -1,0 +1,150 @@
+"""Coded gradient redundancy: overlapping data shards + decode-on-settle.
+
+AMB's variable-minibatch mechanism (paper eq. 3) already tolerates
+workers that are merely *slow* — a straggler's b_i(t) shrinks toward 0
+and its sequence weights vanish from the eq.-6 average.  But when a
+worker *vanishes* (fail-stop, churn), every sample assigned to it is
+simply lost: the surviving workers average over a smaller — still
+unbiased but noisier — sample, and a correlated outage can wipe a whole
+region of the data stream for many epochs.
+
+The gradient-coding line of work (Tandon et al.; Karakus et al.,
+arXiv:1803.05397; Li et al., arXiv:1710.09990 — see PAPERS.md) fixes
+this by *assigning data redundantly*: each distinct sample is placed on
+``rho`` workers, laid out so any surviving subset that covers a sample
+can reconstruct the uncoded full-gradient estimate exactly.  This module
+implements the fractional-repetition / rotated-overlapping-shard scheme
+over the AMB worker axes:
+
+  * **Placement** (:class:`CodedAssignment`): the ``n`` workers are
+    partitioned into ``n / rho`` groups of ``rho``; every member of
+    group g holds the *same* distinct data block (the group's shard of
+    the stream), but **rotated** by ``member * per / rho`` slots.
+    Member m's first-b_i samples therefore start at a different point
+    of the block, so partial minibatches of distinct members cover
+    *complementary* slots before they overlap (Li et al.'s overlapping
+    batches), and a single surviving member with b_i = per covers the
+    whole block (fractional repetition).
+  * **Decode** (:meth:`CodedAssignment.decode_weights` /
+    :func:`epoch_weights`): instead of a separate decoding matrix, the
+    reconstruction rides the sequence-weight mechanism the step already
+    has — each worker's included sample is weighted ``1 / copies`` where
+    ``copies`` counts how many group members' minibatches cover that
+    distinct slot this epoch.  Every covered distinct slot then
+    contributes total weight exactly 1 across the fleet, so the eq.-6
+    b-weighted mean gradient equals the plain mean over the distinct
+    covered samples — an unbiased full-gradient estimate from any
+    surviving (or straggling) k-of-n subset, with no decode step: the
+    weights flow through ``lm_loss`` (which supports fractional
+    sequence weights) and the agreed ``sum w`` normaliser column of
+    :func:`repro.dist.amb.pack_messages`.
+
+``rho = 1`` (or ``assignment=None``) reproduces the uncoded eq.-3 path
+**bit-exactly** — same ops, same 0/1 weights — so golden-parity tests
+and default sessions are untouched.  Nothing here imports
+:mod:`repro.dist.amb` (that module builds on this one).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class CodedAssignment:
+    """Fractional-repetition placement of data blocks over ``n`` workers.
+
+    ``rho`` is the replication factor: workers ``g*rho .. (g+1)*rho - 1``
+    form group g and all hold group g's distinct data block, member m
+    rotated by ``m * per / rho`` slots.  ``rho = 1`` is the uncoded
+    layout (group = worker, no rotation).
+    """
+
+    n: int
+    rho: int = 1
+
+    def __post_init__(self):
+        if self.rho < 1:
+            raise ValueError(f"redundancy must be >= 1, got {self.rho}")
+        if self.n % self.rho:
+            raise ValueError(f"redundancy {self.rho} must divide the "
+                             f"{self.n} workers (fractional-repetition "
+                             f"groups)")
+
+    @property
+    def groups(self) -> int:
+        return self.n // self.rho
+
+    def group(self, i: int) -> int:
+        return i // self.rho
+
+    def data_nodes(self) -> np.ndarray:
+        """Stream node index per worker: group members share a node."""
+        return np.arange(self.n) // self.rho
+
+    def shifts(self, per: int) -> np.ndarray:
+        """Rotation offset per worker (slots): member m of any group
+        starts its minibatch at block slot ``m * per / rho``."""
+        member = np.arange(self.n) % self.rho
+        return (member * per) // self.rho
+
+    def decode_weights(self, b: Array, per: int):
+        """Per-sequence decode weights from this epoch's b_i(t).
+
+        ``b``: (n,) per-worker minibatch sizes (0 for failed / masked /
+        fully-straggled workers).  Returns ``(sw, bw_eff)``:
+
+          * ``sw`` — (n, per) float32; worker i's local slot s gets
+            ``1 / copies`` if ``s < b_i`` (where ``copies`` counts the
+            group members covering the same *distinct* block slot this
+            epoch), else 0.  Every covered distinct slot sums to weight
+            1 across its group.
+          * ``bw_eff`` — (n,) float32 effective sample counts
+            ``sum_s sw[i, s]`` (the eq.-6 / pack_messages weights; their
+            fleet sum equals the number of distinct samples covered).
+
+        In-graph (``b`` may be traced); all index maps are static.
+        """
+        n, rho = self.n, self.rho
+        bw = jnp.minimum(b, per).astype(jnp.int32)
+        if rho <= 1:
+            # uncoded: the exact eq.-3 ops of seq_weights_from_b
+            idx = jnp.arange(n * per)
+            sw = ((idx % per) < b[idx // per]).astype(jnp.float32)
+            return sw.reshape(n, per), bw.astype(jnp.float32)
+        shift = self.shifts(per)                        # (n,) static
+        # worker j covers distinct block slot u iff its local position
+        # of u — (u - shift_j) mod per — lies inside its minibatch b_j
+        local_of_block = (np.arange(per)[None, :] - shift[:, None]) % per
+        covered = jnp.asarray(local_of_block) < bw[:, None]     # (n, per)
+        copies = covered.reshape(self.groups, rho, per).sum(1)  # (G, per)
+        # gather each worker's copy-counts at its own (rotated) slots
+        block_of_local = (np.arange(per)[None, :] + shift[:, None]) % per
+        cw = jnp.take_along_axis(jnp.repeat(copies, rho, axis=0),
+                                 jnp.asarray(block_of_local), axis=1)
+        sw = jnp.where(jnp.arange(per)[None, :] < bw[:, None],
+                       1.0 / jnp.maximum(cw, 1).astype(jnp.float32), 0.0)
+        return sw, sw.sum(axis=1)
+
+
+def epoch_weights(b: Array, n: int, per: int,
+                  assignment: Optional[CodedAssignment] = None):
+    """(sw (n, per), bw_eff (n,)) for one epoch — coded or uncoded.
+
+    The single entry point the train steps use: ``assignment=None`` (or
+    ``rho = 1``) is the bit-exact uncoded eq.-3 path; a coded assignment
+    returns the ``1/copies`` decode weights (see
+    :meth:`CodedAssignment.decode_weights`).
+    """
+    if assignment is None:
+        assignment = CodedAssignment(n, 1)
+    if assignment.n != n:
+        raise ValueError(f"assignment covers {assignment.n} workers, "
+                         f"step has {n}")
+    return assignment.decode_weights(b, per)

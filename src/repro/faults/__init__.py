@@ -1,0 +1,33 @@
+"""Fault injection for straggler-proof fleets (churn, outages, slowdowns).
+
+The paper's AMB mechanism absorbs workers that are *slow* (their b_i(t)
+shrinks, down to the b_i = 0 wipeout case); this package supplies the
+machinery to exercise — and survive — workers that *vanish*:
+
+  * :mod:`repro.faults.models` — pure, epoch-indexed
+    :class:`FaultModel` processes (:class:`FailStop`,
+    :class:`FailSlow`, :class:`PoissonChurn`,
+    :class:`CorrelatedOutage`, :class:`Compose`) producing a
+    :class:`FleetState` (membership mask + per-worker slowdowns) that
+    composes with the existing :class:`repro.core.stragglers`
+    straggler models.
+  * :mod:`repro.faults.inject` — :class:`FaultInjector`, driving a
+    model through :class:`repro.api.AMBSession`: membership changes go
+    through ``set_active`` (drain-first flush, survivor-tap rebuild,
+    dual state preserved across leave→rejoin), slowdowns scale the
+    clock's per-gradient draws.
+
+Pair with ``TrainSpec.redundancy`` (:mod:`repro.dist.redundancy`) so the
+gradient estimate stays unbiased while workers are down; see the
+``dist_churn`` section of ``benchmarks/dist_step.py`` for the
+graceful-degradation curves and ``scripts/churn_smoke.py`` for the CI
+smoke.
+"""
+from .models import (Compose, CorrelatedOutage, FailSlow,   # noqa: F401
+                     FailStop, FaultModel, FleetState, PoissonChurn)
+from .inject import FaultInjector                           # noqa: F401
+
+__all__ = [
+    "Compose", "CorrelatedOutage", "FailSlow", "FailStop", "FaultModel",
+    "FaultInjector", "FleetState", "PoissonChurn",
+]

@@ -1,0 +1,66 @@
+"""Drive a :class:`~repro.faults.models.FaultModel` through a session.
+
+The injector is the glue between the pure fault processes and
+:class:`repro.api.AMBSession`'s elastic-membership machinery.  Once per
+epoch (``session.run(..., faults=...)`` calls :meth:`FaultInjector.apply`
+before stepping) it:
+
+  1. samples the epoch's :class:`~repro.faults.models.FleetState`,
+  2. quorum-guards it (an all-down fleet keeps worker 0 up — AMB needs
+     at least one survivor to define the epoch),
+  3. on a *membership change*, calls ``session.set_active`` — which
+     first **drains the in-flight consensus queue** (pipelined/async
+     payloads settle under the operator they were packed for) and then
+     rebuilds the gossip operator on the survivors (the relayout taps of
+     :mod:`repro.dist.consensus`); a re-admitted worker resumes from its
+     preserved stale dual,
+  4. pins the epoch's slowdown multipliers on the session — the clock's
+     per-gradient time draws are scaled per worker, so a fail-slow
+     worker's b_i(t) shrinks through the paper's own deadline mechanism.
+
+Membership events are recorded on ``injector.events`` (epoch + mask) for
+benchmarks and logs.  The injector holds no model state beyond the last
+applied mask, so constructing a fresh injector over the same model —
+e.g. after a session restore — replays the identical trajectory.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+from .models import FaultModel, FleetState
+
+
+class FaultInjector:
+    """Apply a fault model's fleet state to a session, epoch by epoch."""
+
+    def __init__(self, model: FaultModel):
+        self.model = model
+        self._mask: Optional[tuple] = None
+        self._slow: Optional[tuple] = None
+        self.events: list = []
+
+    def apply(self, session, epoch: int) -> FleetState:
+        """Sample epoch's fleet state and actuate it on ``session``."""
+        st = self.model.fleet(int(epoch), session.n_workers)
+        active = np.asarray(st.active, dtype=bool).copy()
+        if not active.any():
+            active[0] = True        # quorum guard: AMB needs a survivor
+        mask = tuple(bool(a) for a in active)
+        if mask != self._mask:
+            session.set_active(active)
+            self.events.append({"epoch": int(epoch),
+                                "active": [int(a) for a in active]})
+            self._mask = mask
+        slow = tuple(float(s) for s in st.slow)
+        if slow != self._slow:
+            session.set_slowdown(None if all(s == 1.0 for s in slow)
+                                 else st.slow)
+            self._slow = slow
+        return FleetState(active=active, slow=np.asarray(st.slow))
+
+    @property
+    def membership_changes(self) -> int:
+        """Number of distinct membership transitions applied so far."""
+        return len(self.events)

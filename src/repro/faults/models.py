@@ -1,0 +1,176 @@
+"""Fault models: deterministic fleet-state processes for churn injection.
+
+A :class:`FaultModel` describes *what happens to the fleet* over training
+epochs — which workers are up, and how much slower than nominal each one
+runs — as a pure function of the epoch index:
+
+    ``model.fleet(epoch, n) -> FleetState(active (n,) bool, slow (n,) f32)``
+
+Purity is the load-bearing property: the injector re-samples the fleet
+state from scratch every epoch, so a restored session replays the exact
+fault trajectory the saved one would have seen (bit-exact save→restore
+under churn, asserted by ``scripts/churn_smoke.py``), and two runs with
+the same seed see identical failures regardless of wall-clock timing.
+
+The models compose *with* — not instead of — the existing
+:class:`repro.core.stragglers.StragglerModel`: stragglers draw each
+epoch's per-gradient times, fail-slow multiplies those draws (so a
+degraded worker's b_i(t) shrinks through the paper's own deadline
+mechanism), and fail-stop / churn removes workers entirely via
+``AMBSession.set_active`` (b_i = 0 plus a consensus-operator rebuild —
+the survivor-tap relayout of :mod:`repro.dist.consensus`).
+
+Models:
+
+  * :class:`FailStop` — named workers go down at a fixed epoch (and
+    optionally come back): the deterministic unit case.
+  * :class:`FailSlow` — named workers run ``factor`` x slower over an
+    epoch window (a thermally-throttled or contended host).
+  * :class:`PoissonChurn` — per-worker alternating renewal join/leave:
+    up-times ~ Geometric(leave_rate), down-times ~ Geometric(rejoin_rate)
+    (the discrete-epoch Poisson process), independent per worker from a
+    per-worker seed.  ``pin`` workers never leave (the quorum anchor).
+  * :class:`CorrelatedOutage` — a whole worker group drops together
+    periodically (rack / power-domain failures; the case coded
+    redundancy must place replicas *across* groups to survive).
+  * :class:`Compose` — intersection of actives, product of slowdowns.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetState:
+    """One epoch's fleet condition: membership + speed multipliers."""
+
+    active: np.ndarray        # (n,) bool — up this epoch
+    slow: np.ndarray          # (n,) float — per-gradient time multiplier
+                              # (1.0 = nominal; applies to active workers)
+
+    @property
+    def healthy(self) -> bool:
+        return bool(self.active.all() and np.all(self.slow == 1.0))
+
+
+def _nominal(n: int) -> FleetState:
+    return FleetState(active=np.ones(n, dtype=bool),
+                      slow=np.ones(n, dtype=np.float64))
+
+
+class FaultModel:
+    """Deterministic epoch -> :class:`FleetState` process (see module
+    docstring).  Implementations must be pure in ``epoch`` — no hidden
+    state — so restores replay the identical fault trajectory."""
+
+    def fleet(self, epoch: int, n: int) -> FleetState:
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class FailStop(FaultModel):
+    """``workers`` go down at epoch ``at``; back at ``until`` (if set)."""
+
+    workers: Tuple[int, ...]
+    at: int = 0
+    until: Optional[int] = None
+
+    def fleet(self, epoch: int, n: int) -> FleetState:
+        st = _nominal(n)
+        down = epoch >= self.at and (self.until is None
+                                     or epoch < self.until)
+        if down:
+            st.active[list(self.workers)] = False
+        return st
+
+
+@dataclasses.dataclass(frozen=True)
+class FailSlow(FaultModel):
+    """``workers`` run ``factor`` x slower on epochs [start, stop)."""
+
+    workers: Tuple[int, ...]
+    factor: float = 4.0
+    start: int = 0
+    stop: Optional[int] = None
+
+    def fleet(self, epoch: int, n: int) -> FleetState:
+        st = _nominal(n)
+        if epoch >= self.start and (self.stop is None or epoch < self.stop):
+            st.slow[list(self.workers)] = float(self.factor)
+        return st
+
+
+@dataclasses.dataclass(frozen=True)
+class PoissonChurn(FaultModel):
+    """Independent per-worker alternating-renewal join/leave churn.
+
+    Worker i (for i >= ``pin``) alternates up/down phases with
+    geometrically distributed durations — mean up-time ``1/leave_rate``
+    epochs, mean down-time ``1/rejoin_rate`` epochs — drawn from a
+    per-worker ``default_rng((seed, i))`` stream walked from epoch 0 on
+    every query (purity over speed; epochs are cheap at bench scale).
+    The first ``pin`` workers never leave: the quorum anchor that keeps
+    ``set_active``'s at-least-one-survivor invariant trivially true.
+    """
+
+    leave_rate: float = 0.25
+    rejoin_rate: float = 0.5
+    seed: int = 0
+    pin: int = 1
+
+    def fleet(self, epoch: int, n: int) -> FleetState:
+        st = _nominal(n)
+        for i in range(max(self.pin, 0), n):
+            rng = np.random.default_rng((self.seed, i))
+            t, up = 0, True
+            while True:
+                dur = int(rng.geometric(
+                    self.leave_rate if up else self.rejoin_rate))
+                if t + dur > epoch:
+                    break
+                t += dur
+                up = not up
+            st.active[i] = up
+        return st
+
+
+@dataclasses.dataclass(frozen=True)
+class CorrelatedOutage(FaultModel):
+    """``group`` drops together for ``duration`` epochs every ``period``.
+
+    Models rack / power-domain failures: the outage window starts at
+    epochs ``start, start + period, ...`` and every listed worker is
+    down for the whole window — the correlated case that defeats
+    same-group data placement and motivates rotating coded replicas
+    across failure domains.
+    """
+
+    group: Tuple[int, ...]
+    period: int = 8
+    duration: int = 2
+    start: int = 2
+
+    def fleet(self, epoch: int, n: int) -> FleetState:
+        st = _nominal(n)
+        if epoch >= self.start \
+                and (epoch - self.start) % self.period < self.duration:
+            st.active[list(self.group)] = False
+        return st
+
+
+@dataclasses.dataclass(frozen=True)
+class Compose(FaultModel):
+    """AND of memberships, product of slowdowns, across ``models``."""
+
+    models: Tuple[FaultModel, ...]
+
+    def fleet(self, epoch: int, n: int) -> FleetState:
+        st = _nominal(n)
+        for m in self.models:
+            sub = m.fleet(epoch, n)
+            st.active[:] &= sub.active       # in-place: fields are frozen
+            st.slow[:] *= sub.slow
+        return st

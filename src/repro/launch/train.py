@@ -22,6 +22,14 @@ in-flight consensus payloads, self-tuning on):
       --async --staleness 2 --controller
 (``--pipeline`` is the staleness-1 special case; ``--restore DIR``
 resumes a saved session, controller state included.)
+
+Fault tolerance: ``--churn RATE`` drives the run through a
+:class:`repro.faults.PoissonChurn` model (workers leave at RATE per
+epoch, rejoin at ``--churn-rejoin``; worker 0 is pinned up) — membership
+changes flow through the session's elastic ``set_active`` path, so
+consensus re-lays onto the survivors' ring/torus.  Pair with
+``--redundancy RHO`` to keep the gradient estimate unbiased while
+replica holders are down.
 """
 from __future__ import annotations
 
@@ -47,7 +55,22 @@ def main(argv=None):
                          "(params, opt/dual state, and step counter; the "
                          "saved specs override the spec flags)")
     ap.add_argument("--metrics", default=None)
+    ap.add_argument("--churn", type=float, default=0.0, metavar="RATE",
+                    help="Poisson churn: per-epoch leave rate for each "
+                         "unpinned worker (0 = off); membership changes "
+                         "rebuild consensus over the survivors")
+    ap.add_argument("--churn-rejoin", type=float, default=0.5,
+                    help="per-epoch rejoin rate for downed workers")
+    ap.add_argument("--churn-seed", type=int, default=0,
+                    help="fault-trajectory seed (independent of --seed)")
     args = ap.parse_args(argv)
+
+    faults = None
+    if args.churn > 0.0:
+        from ..faults import PoissonChurn
+        faults = PoissonChurn(leave_rate=args.churn,
+                              rejoin_rate=args.churn_rejoin,
+                              seed=args.churn_seed)
 
     metrics_path = args.metrics
     try:
@@ -89,7 +112,8 @@ def main(argv=None):
     # the prefetched data plane: per-worker shards of the arch's LM
     # stream (worker i draws stream node i), host build + device put
     # overlapped with the previous epoch's step
-    m = session.run(args.steps, prefetch=args.prefetch, on_step=on_step)
+    m = session.run(args.steps, prefetch=args.prefetch, on_step=on_step,
+                    faults=faults)
     loss = None if m is None else m["loss"]   # zero-step run: no-op
     session.flush()      # settle in-flight gossip (pipelined mode)
     if args.ckpt_dir:

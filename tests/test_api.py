@@ -215,7 +215,10 @@ def test_masked_strategy_converges_to_active_mean():
     active = (True, True, False, True, True, True)
     msgs = jax.random.normal(jax.random.PRNGKey(0), (n, 16))
     g = make_strategy("gossip", n, rounds=300, graph="ring", active=active)
-    assert g.taps is None             # masked P is dense, not circulant
+    # survivors re-lay onto a smaller ring: the masked operator stays on
+    # the tap fast path instead of falling back to a dense P @ m
+    from repro.dist import SurvivorTaps
+    assert isinstance(g.taps, SurvivorTaps)
     out = np.asarray(g.combine(msgs))
     act = np.asarray(active)
     want = np.asarray(msgs)[act].mean(0)

@@ -200,6 +200,32 @@ def test_prefetcher_close_unblocks_producer():
     assert not pf._thread.is_alive()
 
 
+def test_prefetcher_error_sentinel_honors_close_on_full_queue():
+    """A source error with the queue already full must not strand the
+    producer: the error sentinel's put goes through the same
+    stop-polling loop as batches, so close() still reaps the thread
+    even when the consumer never drains the error."""
+    class BoomAfterFill(InputSource):
+        n_workers, per_worker = 1, 1
+
+        def batch(self, epoch):
+            if epoch >= 1:                  # epoch 0 fills the depth-1 queue
+                raise RuntimeError("late boom")
+            return {"e": np.asarray([epoch])}
+
+    pf = Prefetcher(BoomAfterFill(), _mesh11(), steps=5, depth=1,
+                    put=lambda b: b)
+    # wait for the producer to park epoch 0 and hit the error while the
+    # queue is full — its sentinel put is now blocked on the consumer
+    deadline = time.monotonic() + 5.0
+    while pf._q.empty() and time.monotonic() < deadline:
+        time.sleep(0.01)
+    time.sleep(0.1)
+    pf.close()                              # never consumed anything
+    pf._thread.join(timeout=5.0)
+    assert not pf._thread.is_alive()
+
+
 def test_prefetcher_puts_batches_on_device():
     mesh = _mesh11()
     src = _CountingSource()
@@ -238,6 +264,41 @@ def test_session_run_sync_path_matches_prefetched():
     mA = sA.run(2, prefetch=2)
     mB = sB.run(2, prefetch=0)
     assert mA["loss"] == mB["loss"]
+
+
+def test_session_run_surfaces_source_error_and_stays_usable():
+    """A source raising mid-run must surface from session.run itself —
+    not hang, not vanish into the prefetch thread — and leave the
+    session flushable and steppable, with the producer thread reaped."""
+    import threading
+
+    s, _ = _tiny_session(ConsensusSpec(consensus="gossip", graph="ring",
+                                       async_epochs=True, staleness=2))
+    inner = s.batch_source()
+
+    class Flaky(InputSource):
+        n_workers = inner.n_workers
+        per_worker = inner.per_worker
+
+        def batch(self, epoch):
+            if epoch == 2:
+                raise RuntimeError("shard fetch failed")
+            return inner.batch(epoch)
+
+    threads_before = threading.active_count()
+    with pytest.raises(RuntimeError, match="shard fetch failed"):
+        s.run(5, source=Flaky())
+    # run's finally closed the prefetcher: no leaked producer thread
+    deadline = time.monotonic() + 5.0
+    while threading.active_count() > threads_before \
+            and time.monotonic() < deadline:
+        time.sleep(0.01)
+    assert threading.active_count() <= threads_before
+    assert s.steps_done == 2                # the epochs that completed
+    s.flush()                               # drains in-flight consensus
+    m = s.step(inner.batch(2))              # and the session still steps
+    assert np.isfinite(m["loss"])
+    s.close()
 
 
 @pytest.mark.parametrize("consensus", [
