@@ -1,7 +1,7 @@
 # Repro convenience targets.  `make verify` is the tier-1 gate.
 
 .PHONY: verify verify-fast smoke controller-smoke dataplane-smoke \
-        churn-smoke docs-check bench-dist
+        churn-smoke serve-smoke docs-check bench-dist
 
 verify:               # docs check + smokes + full pytest suite
 	scripts/verify.sh
@@ -20,6 +20,9 @@ dataplane-smoke:      # prefetch + donation + kernel-routing CI smoke
 
 churn-smoke:          # Poisson churn + coded redundancy CI smoke
 	JAX_PLATFORMS=cpu python scripts/churn_smoke.py
+
+serve-smoke:          # continuous batching + AMB interleave CI smoke
+	JAX_PLATFORMS=cpu python scripts/serve_smoke.py
 
 docs-check:           # README/docs references must match the code
 	python scripts/check_docs.py

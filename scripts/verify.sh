@@ -63,6 +63,12 @@ if [[ "$smoke" == 1 ]]; then
   # bit-exact save -> restore mid-churn, single-survivor identity
   echo "== churn smoke: python scripts/churn_smoke.py =="
   python scripts/churn_smoke.py
+
+  # serve smoke (fast lane too): staggered continuous batching == static
+  # reference token-for-token, background AMB fine-tune epoch absorbed
+  # into the round budget, SLO JSONL flushed
+  echo "== serve smoke: python scripts/serve_smoke.py =="
+  python scripts/serve_smoke.py
 fi
 
 echo "== pytest ${pytest_args[*]:-} =="

@@ -414,8 +414,9 @@ class AMBSession:
         steps``, so a restored session continues the data order where
         the saved one stopped.  ``prefetch=0`` is the synchronous
         baseline (build, put, then step — the pre-dataplane behavior,
-        kept for A/B timing).  ``on_step(step, metrics)`` is called
-        after every epoch with the session's absolute step counter.
+        kept for A/B timing).  ``on_step(epoch, metrics)`` is called
+        after every epoch with the 0-based absolute index of the epoch
+        that just ran (``steps_done`` has already advanced past it).
 
         ``faults`` is a :class:`repro.faults.FaultModel` (or a prebuilt
         :class:`repro.faults.FaultInjector`) applied *before* each
@@ -444,7 +445,7 @@ class AMBSession:
                     injector.apply(self, epoch)
                 out = self.step(source.batch(epoch))
                 if on_step is not None:
-                    on_step(self.steps_done, out)
+                    on_step(self.steps_done - 1, out)
             return out
         pf = Prefetcher(source, self.mesh, self._batch_axes,
                         depth=prefetch, start_epoch=self.steps_done,
@@ -457,7 +458,7 @@ class AMBSession:
                     injector.apply(self, self.steps_done)
                 out = self.step(batch)
                 if on_step is not None:
-                    on_step(self.steps_done, out)
+                    on_step(self.steps_done - 1, out)
         finally:
             pf.close()
         return out

@@ -1,52 +1,63 @@
-"""Batched serving driver: one :class:`repro.api.AMBSession` for both
-AMB fine-tuning and decode.
+"""Serving driver: thin CLI over :mod:`repro.serve`.
 
-The serving analogue of AMB's fixed-time contract: each decode *round* has
-a fixed wall-clock budget; requests are grouped into a batch, every round
-emits one token per active request (continuous batching over a fixed-shape
-slot array).
+Continuous batching over a fixed slot array with background AMB
+fine-tuning absorbed into the round budget — the serving analogue of
+the paper's fixed-time contract (each round has a fixed wall-clock
+budget; requests contribute whatever tokens fit; leftover budget goes
+to training instead of idling).
 
-``--finetune N`` runs N batch-parallel AMB fine-tuning steps through the
-session *before* decoding — the session owns the mesh, the sharded
-parameters, the clock, the consensus strategy, and the prefetched data
-plane (``session.run`` feeds per-worker LM-stream shards through a
-background :class:`repro.data.Prefetcher`), and ``session.params``
-hands the post-fine-tune primal straight to prefill/decode.  With
-``--finetune 0`` (default) the session still does the mesh + param setup,
-so decode-only serving shares the exact same initialization path as
-training.
+``--requests N`` synthesizes a staggered workload (``--arrival-gap``
+seconds between arrivals, prompt lengths jittered around
+``--prompt-len``); ``--batch`` sets the slot count; ``--finetune N``
+caps the background AMB epochs the scheduler may absorb.  The session
+owns the mesh, sharded params, clock, consensus and data plane exactly
+as in training; ``session.params`` hands the primal to the slot
+engine.  SLO metrics (TTFT / TPOT / latency p50-p99, tokens/s) and
+per-epoch train loss stream to ``--metrics`` as JSONL.
 
 Example:
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --smoke \
-      --batch 4 --prompt-len 64 --new-tokens 32 --finetune 8
+      --batch 4 --requests 12 --prompt-len 64 --new-tokens 32 \
+      --finetune 8 --round-budget 0.25
 """
 from __future__ import annotations
 
 import argparse
-import time
-
-import jax
-import jax.numpy as jnp
+import json
 
 from ..api import AMBSession, ClockSpec, ConsensusSpec, TrainSpec
-from ..dist import use_sharding
-from ..models import decode_step, prefill
+from ..serve import (AdmissionPolicy, RequestQueue, SamplingSpec,
+                     ServeMetrics, ServeScheduler, SlotEngine,
+                     synthetic_requests)
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2-1.5b")
     ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=4,
+                    help="decode slots (concurrent requests)")
+    ap.add_argument("--requests", type=int, default=0, metavar="N",
+                    help="requests to serve (0 = one per slot)")
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--new-tokens", type=int, default=32)
+    ap.add_argument("--arrival-gap", type=float, default=0.0, metavar="S",
+                    help="seconds between staggered arrivals")
+    ap.add_argument("--round-budget", type=float, default=0.25, metavar="S",
+                    help="fixed time budget per decode round (the AMB "
+                         "contract: budget fixed, work variable)")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="sampling temperature (0 = greedy)")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="restrict sampling to the k best tokens (0 = all)")
     ap.add_argument("--data", type=int, default=1)
     ap.add_argument("--model", type=int, default=1)
     ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--greedy", action="store_true", default=True)
+    ap.add_argument("--greedy", action="store_true",
+                    help="force greedy decode (same as --temperature 0)")
     ap.add_argument("--finetune", type=int, default=0, metavar="STEPS",
-                    help="AMB fine-tuning steps to run through the "
-                         "session before decoding (0 = decode only)")
+                    help="cap on background AMB fine-tune epochs absorbed "
+                         "into idle round budget (0 = serve only)")
     ap.add_argument("--finetune-seq-len", type=int, default=64)
     ap.add_argument("--finetune-batch-per-worker", type=int, default=2)
     from ..dist.consensus import CONSENSUS_CHOICES
@@ -54,8 +65,7 @@ def main(argv=None):
                     choices=list(CONSENSUS_CHOICES),
                     help="consensus strategy for --finetune")
     ap.add_argument("--metrics", default=None, metavar="PATH",
-                    help="JSONL path for per-epoch --finetune metrics "
-                         "(written by the session's MetricsLogger)")
+                    help="JSONL path for SLO + fine-tune metrics")
     args = ap.parse_args(argv)
 
     train = TrainSpec(arch=args.arch, smoke=args.smoke,
@@ -70,62 +80,39 @@ def main(argv=None):
         raise SystemExit(str(e))
     cfg, mesh = session.cfg, session.mesh
 
-    if args.finetune:
-        t0 = time.time()
+    temperature = 0.0 if args.greedy else args.temperature
+    sampling = SamplingSpec(temperature=temperature, top_k=args.top_k,
+                            seed=args.seed)
+    jitter = min(args.prompt_len - 1, args.prompt_len // 4)
+    cache_len = args.prompt_len + jitter + args.new_tokens
+    n_req = args.requests or args.batch
+    reqs = synthetic_requests(
+        n_req, vocab_size=cfg.vocab_size, prompt_len=args.prompt_len,
+        prompt_jitter=jitter, max_new_tokens=args.new_tokens,
+        arrival_gap_s=args.arrival_gap, seed=args.seed + 1)
+    queue = RequestQueue(AdmissionPolicy(cache_len=cache_len))
+    for r in reqs:
+        queue.push(r)
 
-        def on_step(step, m):
-            step = step - 1      # the 0-based epoch that just ran
-            if step % 5 == 0 or step == args.finetune - 1:
-                print(f"finetune {step:3d} loss {m['loss']:.4f} "
-                      f"b(t)={m['global_batch']:.0f}")
-
-        # prefetched data plane: the session's default per-worker
-        # LM-stream shards, built + device-put ahead of the step
-        session.run(args.finetune, on_step=on_step)
-        session.flush()
-        session.close()      # flush the metrics JSONL before decode
-        print(f"finetune: {args.finetune} AMB steps in "
-              f"{time.time() - t0:.2f}s")
-
-    params = session.params      # the shared primal: fine-tuned or init
-    with use_sharding(mesh):
-        toks = jax.random.randint(jax.random.PRNGKey(1),
-                                  (args.batch, args.prompt_len), 0,
-                                  cfg.vocab_size)
-        batch = {"tokens": toks}
-        if cfg.input_mode == "embeds":
-            batch = {"embeds": params["embed"][toks]}
-        if cfg.family == "audio":
-            batch["enc_embeds"] = jax.random.normal(
-                jax.random.PRNGKey(2),
-                (args.batch, cfg.encoder_seq, cfg.d_model), cfg.jdtype)
-
-        prefill_fn = jax.jit(
-            lambda p, b: prefill(p, cfg, b, extra_capacity=args.new_tokens))
-        step_fn = jax.jit(lambda p, st, t: decode_step(p, cfg, st, t))
-
-        t0 = time.time()
-        logits, state = prefill_fn(params, batch)
-        logits.block_until_ready()
-        t_prefill = time.time() - t0
-        print(f"prefill: {args.batch}x{args.prompt_len} in {t_prefill:.2f}s "
-              f"({args.batch * args.prompt_len / t_prefill:.0f} tok/s)")
-
-        out_tokens = []
-        tok = jnp.argmax(logits, axis=-1)
-        t0 = time.time()
-        for _ in range(args.new_tokens):
-            out_tokens.append(tok)
-            logits, state = step_fn(params, state, tok)
-            tok = jnp.argmax(logits, axis=-1)
-        tok.block_until_ready()
-        t_dec = time.time() - t0
-        print(f"decode: {args.new_tokens} rounds x {args.batch} reqs in "
-              f"{t_dec:.2f}s ({args.new_tokens * args.batch / t_dec:.0f} tok/s)")
-        gen = jnp.stack(out_tokens, axis=1)
-        print("generated token ids (first request):",
-              gen[0][:16].tolist(), "...")
-    return gen
+    try:
+        engine = SlotEngine(session.params, cfg, slots=args.batch,
+                            cache_len=cache_len, sampling=sampling,
+                            mesh=mesh)
+        sched = ServeScheduler(engine, queue,
+                               round_budget_s=args.round_budget,
+                               session=session if args.finetune else None,
+                               train_epochs=args.finetune,
+                               metrics=ServeMetrics(session.metrics))
+        report = sched.run()
+        session.flush()      # settle in-flight gossip (pipelined mode)
+        print(json.dumps(report.summary, indent=2, sort_keys=True))
+        if report.requests:
+            r0 = min(report.requests, key=lambda r: r.rid)
+            print(f"request {r0.rid} tokens:", r0.out_tokens[:16],
+                  "..." if len(r0.out_tokens) > 16 else "")
+        return report
+    finally:
+        session.close()      # idempotent; flushes SLO + train JSONL
 
 
 if __name__ == "__main__":

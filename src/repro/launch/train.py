@@ -98,9 +98,6 @@ def main(argv=None):
     last = session.steps_done + args.steps - 1
 
     def on_step(step, m):
-        # on_step reports steps_done (the post-increment counter); print
-        # the 0-based index of the epoch that just ran
-        step = step - 1
         if "action" in m:
             print(f"step {step:4d} controller: {m['action']['reason']}")
         if step % 10 == 0 or step == last:

@@ -25,7 +25,9 @@ class MetricsLogger:
         self._fh.flush()
 
     def close(self):
-        self._fh.close()
+        if not self._fh.closed:
+            self._fh.flush()
+            self._fh.close()
 
 
 def read_metrics(path: str | Path) -> list[dict]:

@@ -1,8 +1,10 @@
 """Model zoo: 10 assigned architectures over one functional core."""
 from .common import ArchConfig
-from .model import (DecodeState, decode_step, forward, init_decode_state,
-                    init_params, lm_loss, logits_fn, param_count, prefill)
+from .model import DecodeState, decode_step, evict_decode_state, forward
+from .model import init_decode_state, init_params, insert_decode_state
+from .model import lm_loss, logits_fn, param_count, prefill
 
-__all__ = ["ArchConfig", "DecodeState", "decode_step", "forward",
-           "init_decode_state", "init_params", "lm_loss", "logits_fn",
-           "param_count", "prefill"]
+__all__ = ["ArchConfig", "DecodeState", "decode_step", "evict_decode_state",
+           "forward", "init_decode_state", "init_params",
+           "insert_decode_state", "lm_loss", "logits_fn", "param_count",
+           "prefill"]

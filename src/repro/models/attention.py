@@ -219,7 +219,12 @@ def decode_attend(p: dict, x: Array, pos: Array, cache: KVCache,
                   cfg: ArchConfig, *, window: int = 0,
                   cross_kv: Optional[tuple[Array, Array]] = None,
                   cross_len: int = 0) -> tuple[Array, KVCache]:
-    """One-token decode.  x: (B, 1, d); pos: scalar current position.
+    """One-token decode.  x: (B, 1, d); pos: current position.
+
+    ``pos`` is either a scalar (every request at the same position — the
+    static-batch path) or a ``(B,)`` vector of per-request positions (the
+    continuous-batching slot path: each slot decodes at its own depth,
+    writes its own cache row, and masks its own validity window).
 
     With ``cross_kv`` set this is cross-attention against a precomputed
     encoder KV (whisper); the cache is untouched.
@@ -241,31 +246,39 @@ def decode_attend(p: dict, x: Array, pos: Array, cache: KVCache,
         return out @ p["wo"], cache
 
     q, k, v = _project_qkv(p, x, cfg)
-    posv = jnp.reshape(pos, (1,))
-    qr = apply_rope(q.reshape(b, 1, -1, hd), posv[None, :], cfg.rope_theta)
+    pos = jnp.asarray(pos)
+    per_slot = pos.ndim == 1               # (B,) per-request positions
+    posq = pos.reshape(-1, 1)              # (B, 1) per-slot or (1, 1) shared
+    qr = apply_rope(q.reshape(b, 1, -1, hd), posq, cfg.rope_theta)
     q = qr.reshape(q.shape)
-    k = apply_rope(k, posv[None, :], cfg.rope_theta)
+    k = apply_rope(k, posq, cfg.rope_theta)
 
     cap = cache.k.shape[1]
     slot = pos % cap if cache.ring else pos
-    k_all = jax.lax.dynamic_update_slice_in_dim(cache.k, k, slot, axis=1)
-    v_all = jax.lax.dynamic_update_slice_in_dim(cache.v, v, slot, axis=1)
+    if per_slot:
+        # each request writes its own row: a batched scatter, not a slice
+        row = jnp.clip(slot, 0, cap - 1)
+        k_all = cache.k.at[jnp.arange(b), row].set(k[:, 0])
+        v_all = cache.v.at[jnp.arange(b), row].set(v[:, 0])
+    else:
+        k_all = jax.lax.dynamic_update_slice_in_dim(cache.k, k, slot, axis=1)
+        v_all = jax.lax.dynamic_update_slice_in_dim(cache.v, v, slot, axis=1)
     new_cache = KVCache(k_all, v_all, cache.ring)
 
-    idx = jnp.arange(cap)
+    idx = jnp.arange(cap)[None, :]         # broadcasts against posq (B|1, 1)
     if cache.ring:
         # slot i holds absolute position: the largest p <= pos with p % cap == i
-        abs_pos = pos - ((pos - idx) % cap)
-        valid = (abs_pos >= 0) & (abs_pos <= pos)
+        abs_pos = posq - ((posq - idx) % cap)
+        valid = (abs_pos >= 0) & (abs_pos <= posq)
         if window > 0:
-            valid &= (pos - abs_pos) < window
+            valid &= (posq - abs_pos) < window
     else:
-        valid = idx <= pos
+        valid = idx <= posq
         if window > 0:
-            valid &= (pos - idx) < window
+            valid &= (posq - idx) < window
     scores = jnp.einsum("bqkgh,bckh->bqgkc", q.astype(jnp.float32),
                         k_all.astype(jnp.float32)) / jnp.sqrt(hd)
-    scores = jnp.where(valid[None, None, None, None, :], scores, NEG_INF)
+    scores = jnp.where(valid[:, None, None, None, :], scores, NEG_INF)
     probs = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bqgkc,bckh->bqgkh", probs, v_all.astype(jnp.float32))
     out = out.transpose(0, 1, 3, 2, 4).reshape(b, 1, -1).astype(x.dtype)

@@ -333,13 +333,23 @@ def _ring_from_linear(k: Array, cap: int) -> Array:
     return out.at[:, slots].set(last)
 
 
-def prefill(params, cfg: ArchConfig, batch: dict,
-            extra_capacity: int = 0) -> tuple[Array, "DecodeState"]:
+def prefill(params, cfg: ArchConfig, batch: dict, extra_capacity: int = 0,
+            last_pos: Optional[Array] = None) -> tuple[Array, "DecodeState"]:
     """Process a full prompt; returns (last-token logits (B,V), DecodeState).
 
     The returned state is ready for ``decode_step`` at position S.  Attention
     caches are ring buffers of width ``sliding_window`` when SWA is active;
     linear caches get ``extra_capacity`` empty slots for subsequent decode.
+
+    ``last_pos`` (scalar or (B,) int): per-request index of the final *real*
+    prompt token, for prompts right-padded to a shared bucket length
+    (heterogeneous prompt lengths in one fixed-shape batch — the serving
+    tier's insert-on-prefill path).  Logits are gathered at each request's
+    own last position instead of the padded batch's final column, and the
+    returned state carries per-request positions ``last_pos + 1``, so decode
+    resumes each request at its true depth; padded cache rows beyond it stay
+    masked until decode overwrites them.  Causal attention keeps the real
+    prefix's computation independent of the padding.
     """
     x = _embed(params, cfg, batch)
     b, s, _ = x.shape
@@ -460,12 +470,19 @@ def prefill(params, cfg: ArchConfig, batch: dict,
     else:
         raise ValueError(cfg.family)
 
-    hidden = rms_norm(x[:, -1:], params["final_norm"])
+    if last_pos is None:
+        hidden = rms_norm(x[:, -1:], params["final_norm"])
+        pos_out: Array = jnp.int32(s)
+    else:
+        sel = jnp.broadcast_to(
+            jnp.reshape(jnp.asarray(last_pos, jnp.int32), (-1,)), (b,))
+        hidden = rms_norm(x[jnp.arange(b), sel][:, None], params["final_norm"])
+        pos_out = sel + 1
     logits = (hidden @ params["unembed"])[:, 0]
     if cfg.padded_vocab != cfg.vocab_size:
         logits = logits[..., :cfg.vocab_size]
     logits = constrain(logits, "batch", "vocab")
-    return logits, DecodeState(caches, jnp.int32(s), enc_kv)
+    return logits, DecodeState(caches, pos_out, enc_kv)
 
 
 # ---------------------------------------------------------------------------
@@ -487,11 +504,17 @@ class DecodeState:
         return cls(*children)
 
 
-def init_decode_state(cfg: ArchConfig, batch: int, cache_len: int) -> DecodeState:
+def init_decode_state(cfg: ArchConfig, batch: int, cache_len: int,
+                      per_slot_pos: bool = False) -> DecodeState:
     """Allocate decode state for a context of ``cache_len`` tokens.
 
     Attention caches are ring buffers of size ``sliding_window`` when SWA is
     on (O(window) memory at 500k context), else linear of size cache_len.
+
+    ``per_slot_pos`` allocates a (batch,) position vector instead of a shared
+    scalar, so each batch row decodes at its own depth — the serving tier's
+    slot array, where rows are independent requests inserted at different
+    times.
     """
     l = cfg.num_layers
     ring = cfg.sliding_window > 0
@@ -524,7 +547,61 @@ def init_decode_state(cfg: ArchConfig, batch: int, cache_len: int) -> DecodeStat
         enc_kv = (jnp.zeros(kvshape, cfg.jdtype), jnp.zeros(kvshape, cfg.jdtype))
     else:
         raise ValueError(cfg.family)
-    return DecodeState(caches, jnp.zeros((), jnp.int32), enc_kv)
+    pos = (jnp.zeros((batch,), jnp.int32) if per_slot_pos
+           else jnp.zeros((), jnp.int32))
+    return DecodeState(caches, pos, enc_kv)
+
+
+def insert_decode_state(state: DecodeState, one: DecodeState,
+                        slot: Array) -> DecodeState:
+    """Write a batch-1 ``DecodeState`` (from ``prefill``) into row ``slot``.
+
+    Every cache leaf across all families is (L, B, ...) with batch at axis 1,
+    so a single axis-1 dynamic_update_slice serves dense, moe, ssm, hybrid
+    and audio alike — and ``slot`` being a traced scalar means one jitted
+    insert handles every request without recompilation.  The full cap extent
+    of the slot is overwritten (no stale K/V leaks from the previous tenant);
+    ``one``'s caches must therefore match the slot array's capacity (prefill
+    with ``extra_capacity = cap - prompt_len``).  ``state.pos`` must be the
+    per-slot (B,) form from ``init_decode_state(per_slot_pos=True)``.
+    """
+    slot = jnp.asarray(slot, jnp.int32)
+
+    def put(big, small):
+        return jax.lax.dynamic_update_slice_in_dim(
+            big, small.astype(big.dtype), slot, axis=1)
+
+    caches = jax.tree.map(put, state.caches, one.caches)
+    pos1 = jnp.reshape(one.pos, (-1,))[:1].astype(state.pos.dtype)
+    pos = jax.lax.dynamic_update_slice(state.pos, pos1, (slot,))
+    enc_kv = state.enc_kv
+    if enc_kv is not None:
+        enc_kv = jax.tree.map(put, enc_kv, one.enc_kv)
+    return DecodeState(caches, pos, enc_kv)
+
+
+def evict_decode_state(state: DecodeState, slot: Array) -> DecodeState:
+    """Zero row ``slot``'s caches and position (slot-reuse hygiene).
+
+    Functionally optional — ``insert_decode_state`` overwrites the whole
+    extent — but zeroing on retire means a leaked slot holds no residual
+    prompt data and masks any engine bug as an obvious all-zeros cache
+    rather than a stale cross-request one.
+    """
+    slot = jnp.asarray(slot, jnp.int32)
+
+    def clear(big):
+        row = jax.lax.dynamic_slice_in_dim(big, slot, 1, axis=1)
+        return jax.lax.dynamic_update_slice_in_dim(
+            big, jnp.zeros_like(row), slot, axis=1)
+
+    caches = jax.tree.map(clear, state.caches)
+    pos = jax.lax.dynamic_update_slice(
+        state.pos, jnp.zeros((1,), state.pos.dtype), (slot,))
+    enc_kv = state.enc_kv
+    if enc_kv is not None:
+        enc_kv = jax.tree.map(clear, enc_kv)
+    return DecodeState(caches, pos, enc_kv)
 
 
 def decode_step(params, cfg: ArchConfig, state: DecodeState,

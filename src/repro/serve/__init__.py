@@ -1,0 +1,40 @@
+"""``repro.serve`` — continuous-batching serving tier with background
+AMB fine-tuning under the anytime budget.
+
+Four planes, one fixed-time contract:
+
+  * :mod:`repro.serve.request` — ``Request`` lifecycle, the arrival
+    queue, ``AdmissionPolicy``, and ``synthetic_requests`` workloads.
+  * :mod:`repro.serve.slots` — ``SlotEngine``: continuous batching over
+    a fixed-shape slot array (bucketed batch-1 prefill, one jitted
+    insert/decode/evict, slot reuse without recompilation) plus the
+    ``static_generate`` parity reference.
+  * :mod:`repro.serve.scheduler` — ``ServeScheduler`` runs decode
+    rounds and background :class:`repro.api.AMBSession` fine-tune
+    epochs under one fixed ``round_budget_s`` (AMB's contract: the
+    budget is fixed, the work is whatever fits); ``serve_static`` is
+    the timed rebatching baseline; ``WallClock`` / ``SyntheticClock``
+    are the pluggable time sources.
+  * :mod:`repro.serve.metrics` — ``ServeMetrics``: TTFT / TPOT /
+    latency p50-p99, tokens/s, train-loss trajectory, streamed through
+    :class:`repro.metrics.MetricsLogger`.
+
+``launch/serve.py`` is a thin CLI over this package; the
+``dist_serve`` section of ``benchmarks/dist_step.py`` compares the two
+lanes in one run.
+"""
+from .metrics import ServeMetrics, request_record            # noqa: F401
+from .request import AdmissionPolicy, Request, RequestQueue  # noqa: F401
+from .request import synthetic_requests                      # noqa: F401
+from .sampling import SamplingSpec, sample_token             # noqa: F401
+from .scheduler import ServeClock, ServeReport, ServeScheduler  # noqa: F401
+from .scheduler import SyntheticClock, WallClock, serve_static  # noqa: F401
+from .slots import SlotEngine, bucket_len, static_generate   # noqa: F401
+
+__all__ = [
+    "AdmissionPolicy", "Request", "RequestQueue", "SamplingSpec",
+    "ServeClock", "ServeMetrics", "ServeReport", "ServeScheduler",
+    "SlotEngine", "SyntheticClock", "WallClock", "bucket_len",
+    "request_record", "sample_token", "serve_static", "static_generate",
+    "synthetic_requests",
+]

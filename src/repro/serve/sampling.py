@@ -1,0 +1,55 @@
+"""Token sampling for the serving tier.
+
+Greedy (argmax) by default; temperature + top-k when requested.  The
+branch between greedy and stochastic is a *trace-time* python decision on
+the frozen :class:`SamplingSpec`, so the slot engine jits exactly one
+sampler for its lifetime — no recompilation per request.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+_NEG = jnp.float32(-1e30)
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingSpec:
+    """Frozen sampling configuration.
+
+    ``temperature <= 0`` means greedy decode (``top_k`` ignored).
+    ``top_k == 0`` means sample from the full distribution.  ``seed``
+    seeds the engine's PRNG chain; the same (spec, request sequence)
+    replays the same tokens exactly.
+    """
+    temperature: float = 0.0
+    top_k: int = 0
+    seed: int = 0
+
+    @property
+    def greedy(self) -> bool:
+        return self.temperature <= 0.0
+
+
+def sample_token(logits: Array, key: Optional[Array] = None, *,
+                 temperature: float = 0.0, top_k: int = 0) -> Array:
+    """Sample next-token ids from ``logits`` (..., V) -> (...,) int32.
+
+    ``temperature <= 0`` is greedy argmax and ignores ``key``; otherwise
+    ``key`` is required and ``top_k > 0`` restricts sampling to the k
+    highest-probability tokens (mask below the per-row k-th logit).
+    """
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    if key is None:
+        raise ValueError("temperature > 0 requires a PRNG key")
+    scaled = logits.astype(jnp.float32) / jnp.float32(temperature)
+    if top_k > 0:
+        kth = jax.lax.top_k(scaled, top_k)[0][..., -1:]
+        scaled = jnp.where(scaled < kth, _NEG, scaled)
+    return jax.random.categorical(key, scaled, axis=-1).astype(jnp.int32)

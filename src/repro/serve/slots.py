@@ -1,0 +1,275 @@
+"""Slot engine: continuous batching over a fixed-shape decode batch.
+
+The decode batch is a fixed array of ``slots`` rows sharing one jitted
+``decode_step`` — per-slot KV segments, per-slot positions
+(:func:`repro.models.init_decode_state` with ``per_slot_pos=True``).
+Requests are prefilled one at a time (batch-1) at a *bucketed* prompt
+length and scattered into a free row by the single jitted
+:func:`repro.models.insert_decode_state`; retirement (EOS or token
+budget) frees the row and zeroes it (:func:`repro.models.evict_decode_state`).
+The compile set is therefore O(#buckets) prefills + one insert + one
+decode + one evict for the engine's whole lifetime — slot reuse never
+recompiles.
+
+Bucketing is family-aware: dense/vlm prompts are right-padded to the
+next power-of-two bucket (causal attention makes the real prefix's
+computation independent of trailing pads, and the padded cache rows
+stay masked until decode overwrites them — exact, not approximate).
+MoE (capacity-limited routing: pads compete with real tokens for
+expert slots) and ssm/hybrid (recurrent state absorbs pads) prefill at
+exact prompt length instead — one compile per distinct length, still
+batch-1.  Audio (encoder-decoder) is not served here.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..dist import use_sharding
+from ..models import (decode_step, evict_decode_state, init_decode_state,
+                      insert_decode_state, prefill)
+from ..models.common import ArchConfig
+from .request import Request
+from .sampling import SamplingSpec, sample_token
+
+Array = jax.Array
+
+
+def bucket_len(plen: int, cache_len: int, *, exact: bool) -> int:
+    """Padded prefill length for a prompt of ``plen`` tokens."""
+    if exact:
+        return plen
+    b = 8
+    while b < plen:
+        b *= 2
+    return min(b, cache_len)
+
+
+class SlotEngine:
+    """Continuous batching over ``slots`` fixed-shape decode rows.
+
+    The engine is clock-free: it moves tokens, the scheduler stamps
+    time.  ``decode_round`` advances every row one token (inactive rows
+    compute garbage that is ignored and overwritten on insert — the
+    price of a fixed shape, and why there is no recompilation), returns
+    the requests that retired this round.
+    """
+
+    def __init__(self, params, cfg: ArchConfig, *, slots: int,
+                 cache_len: int, sampling: Optional[SamplingSpec] = None,
+                 eos_id: Optional[int] = None, mesh=None):
+        if cfg.family == "audio":
+            raise NotImplementedError(
+                "serve: audio (encoder-decoder) requests need per-request "
+                "encoder features; not supported by the slot engine")
+        if cfg.sliding_window > 0:
+            raise NotImplementedError(
+                "serve: sliding-window ring caches are sized by prompt "
+                "length at prefill and cannot be slot-inserted; serve "
+                "with linear caches")
+        self.params = params
+        self.cfg = cfg
+        self.slots = slots
+        self.cache_len = cache_len
+        self.sampling = sampling or SamplingSpec()
+        self.eos_id = eos_id
+        self.mesh = mesh
+        # exact-length prefill where right-padding is unsound (see module
+        # docstring); power-of-two buckets otherwise
+        self._exact_len = cfg.family not in ("dense", "vlm")
+
+        with self._ctx():
+            self.state = init_decode_state(cfg, slots, cache_len,
+                                           per_slot_pos=True)
+            self.last_tok = jnp.zeros((slots,), jnp.int32)
+        self.active: list[Optional[Request]] = [None] * slots
+        self.free_slots: list[int] = list(range(slots))
+
+        spec = self.sampling
+        self._key = jax.random.PRNGKey(spec.seed)
+        self._nsample = 0
+        self._sample = jax.jit(lambda lg, k: sample_token(
+            lg, k, temperature=spec.temperature, top_k=spec.top_k))
+        self._insert = jax.jit(insert_decode_state)
+        self._evict = jax.jit(evict_decode_state)
+        self._decode = jax.jit(
+            lambda p, st, t: decode_step(p, cfg, st, t))
+        self._prefill_cache: dict[int, object] = {}
+
+    # -- plumbing ----------------------------------------------------------
+
+    def _ctx(self):
+        return use_sharding(self.mesh) if self.mesh is not None \
+            else contextlib.nullcontext()
+
+    def _next_key(self) -> Array:
+        self._nsample += 1
+        return jax.random.fold_in(self._key, self._nsample)
+
+    def _prefill_fn(self, bucket: int):
+        fn = self._prefill_cache.get(bucket)
+        if fn is None:
+            extra = self.cache_len - bucket
+            cfg = self.cfg
+
+            def run(p, toks, last_pos):
+                if cfg.input_mode == "embeds":
+                    batch = {"embeds": p["embed"][toks]}
+                else:
+                    batch = {"tokens": toks}
+                return prefill(p, cfg, batch, extra_capacity=extra,
+                               last_pos=last_pos)
+
+            fn = self._prefill_cache[bucket] = jax.jit(run)
+        return fn
+
+    # -- capacity ----------------------------------------------------------
+
+    @property
+    def has_free(self) -> bool:
+        return bool(self.free_slots)
+
+    @property
+    def active_count(self) -> int:
+        return self.slots - len(self.free_slots)
+
+    # -- lifecycle ---------------------------------------------------------
+
+    def insert(self, req: Request) -> int:
+        """Prefill ``req`` into a free slot; returns its first token.
+
+        The prompt is padded to its bucket, prefilled at batch 1 with
+        ``last_pos`` pointing at the real last token, and scattered into
+        the slot row.  The first generated token is sampled from the
+        prefill logits (so TTFT is one prefill, not prefill + a round).
+        """
+        if not self.free_slots:
+            raise RuntimeError("no free slot")
+        if req.prompt_len + req.max_new_tokens > self.cache_len:
+            raise ValueError(
+                f"request {req.rid}: {req.prompt_len}+{req.max_new_tokens} "
+                f"tokens exceed cache_len={self.cache_len}")
+        slot = self.free_slots.pop(0)
+        bucket = bucket_len(req.prompt_len, self.cache_len,
+                            exact=self._exact_len)
+        toks = jnp.asarray(req.prompt + [0] * (bucket - req.prompt_len),
+                           jnp.int32)[None, :]
+        with self._ctx():
+            logits, one = self._prefill_fn(bucket)(
+                self.params, toks, jnp.int32(req.prompt_len - 1))
+            tok = self._sample(logits, self._next_key())
+            self.state = self._insert(self.state, one, slot)
+            self.last_tok = self.last_tok.at[slot].set(tok[0])
+        first = int(tok[0])
+        req.slot = slot
+        req.out_tokens.append(first)
+        self.active[slot] = req
+        if self._check_retire(req, first):
+            self._retire(req)
+        return first
+
+    def _check_retire(self, req: Request, tok: int) -> bool:
+        if self.eos_id is not None and tok == self.eos_id:
+            req.finish_reason = "eos"
+            return True
+        if len(req.out_tokens) >= req.max_new_tokens:
+            req.finish_reason = "length"
+            return True
+        return False
+
+    def _retire(self, req: Request) -> None:
+        slot = req.slot
+        with self._ctx():
+            self.state = self._evict(self.state, slot)
+        self.active[slot] = None
+        self.free_slots.append(slot)
+
+    def decode_round(self) -> list[Request]:
+        """Advance every slot one token; returns requests retired now."""
+        if self.active_count == 0:
+            return []
+        with self._ctx():
+            logits, self.state = self._decode(self.params, self.state,
+                                              self.last_tok)
+            tok = self._sample(logits, self._next_key())
+            self.last_tok = tok
+        toks = jax.device_get(tok)
+        finished = []
+        for slot, req in enumerate(self.active):
+            if req is None:
+                continue
+            t = int(toks[slot])
+            req.out_tokens.append(t)
+            if self._check_retire(req, t):
+                self._retire(req)
+                finished.append(req)
+        return finished
+
+
+def static_generate(params, cfg: ArchConfig, requests: list[Request], *,
+                    cache_len: int, sampling: Optional[SamplingSpec] = None,
+                    eos_id: Optional[int] = None, mesh=None) -> list[Request]:
+    """Static rebatching reference: one batch, everyone starts together.
+
+    Prompts are right-padded to the batch max (dense/vlm only — the
+    same soundness argument as bucketing), prefilled with a per-request
+    ``last_pos`` vector, then decoded with per-slot positions until
+    *every* request finishes — retired rows keep burning decode rounds,
+    which is exactly the inefficiency continuous batching removes.
+    Clock-free: the scheduler's static lane does its own timed loop;
+    this is the parity reference.  Mutates and returns ``requests``.
+    """
+    if cfg.family not in ("dense", "vlm"):
+        raise NotImplementedError(
+            "static_generate pads to the batch max prompt length, which "
+            "is only sound for dense/vlm")
+    spec = sampling or SamplingSpec()
+    ctx = use_sharding(mesh) if mesh is not None else contextlib.nullcontext()
+    b = len(requests)
+    maxlen = max(r.prompt_len for r in requests)
+    key = jax.random.PRNGKey(spec.seed)
+    nsample = 0
+
+    def sample(lg):
+        nonlocal nsample
+        nsample += 1
+        return sample_token(lg, jax.random.fold_in(key, nsample),
+                            temperature=spec.temperature, top_k=spec.top_k)
+
+    toks = jnp.asarray(
+        [r.prompt + [0] * (maxlen - r.prompt_len) for r in requests],
+        jnp.int32)
+    last_pos = jnp.asarray([r.prompt_len - 1 for r in requests], jnp.int32)
+    batch = {"tokens": toks}
+    with ctx:
+        if cfg.input_mode == "embeds":
+            batch = {"embeds": params["embed"][toks]}
+        logits, state = prefill(params, cfg, batch,
+                                extra_capacity=cache_len - maxlen,
+                                last_pos=last_pos)
+        tok = sample(logits)
+        first = jax.device_get(tok)
+        for i, r in enumerate(requests):
+            r.out_tokens.append(int(first[i]))
+            if eos_id is not None and int(first[i]) == eos_id:
+                r.finish_reason = "eos"
+            elif len(r.out_tokens) >= r.max_new_tokens:
+                r.finish_reason = "length"
+        step = jax.jit(lambda p, st, t: decode_step(p, cfg, st, t))
+        while any(not r.done for r in requests):
+            logits, state = step(params, state, tok)
+            tok = sample(logits)
+            host = jax.device_get(tok)
+            for i, r in enumerate(requests):
+                if r.done:
+                    continue
+                t = int(host[i])
+                r.out_tokens.append(t)
+                if eos_id is not None and t == eos_id:
+                    r.finish_reason = "eos"
+                elif len(r.out_tokens) >= r.max_new_tokens:
+                    r.finish_reason = "length"
+    return requests

@@ -144,6 +144,16 @@ def test_zero_step_session_is_a_noop(tmp_path):
     assert session.steps_done == 0
 
 
+def test_on_step_reports_zero_based_epoch_just_run():
+    """``on_step(epoch, metrics)`` passes the 0-based index of the epoch
+    that just finished, with ``steps_done`` already advanced past it."""
+    session, _ = _tiny_session()
+    seen = []
+    session.run(3, on_step=lambda e, m: seen.append((e, session.steps_done)))
+    assert seen == [(0, 1), (1, 2), (2, 3)]
+    session.close()
+
+
 def test_zero_step_train_driver_returns_none(tmp_path):
     """launch.train with --steps 0 returns None instead of raising
     UnboundLocalError (the pre-redesign bug)."""

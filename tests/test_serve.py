@@ -1,0 +1,367 @@
+"""Serving-tier tests: slots, admission, parity, budget, SLOs, sampling.
+
+The decode-parity tests are the load-bearing ones: the slot engine's
+bucket-padded batch-1 prefill + vector-position decode must produce,
+per request, exactly the tokens a plain scalar-position batch-1
+generation produces — the continuous-batching machinery changes the
+schedule, never the math.  Scheduler/SLO tests run on the
+:class:`~repro.serve.SyntheticClock`, where every timestamp is exact
+arithmetic over the configured op costs.
+"""
+import dataclasses
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.metrics import MetricsLogger
+from repro.models import (decode_step, evict_decode_state,
+                          init_decode_state, init_params,
+                          insert_decode_state, prefill)
+from repro.models.common import ArchConfig
+from repro.serve import (AdmissionPolicy, Request, RequestQueue,
+                         SamplingSpec, ServeMetrics, ServeScheduler,
+                         SlotEngine, SyntheticClock, bucket_len,
+                         sample_token, serve_static, static_generate,
+                         synthetic_requests)
+
+CFG = ArchConfig(name="t", family="dense", num_layers=1, d_model=32,
+                 num_heads=2, num_kv_heads=2, head_dim=16, d_ff=64,
+                 vocab_size=64, q_chunk=64, kv_chunk=64,
+                 mxu_f32_accum=False)
+_PARAMS = None
+
+
+def _params():
+    global _PARAMS
+    if _PARAMS is None:
+        _PARAMS = init_params(jax.random.PRNGKey(0), CFG)
+    return _PARAMS
+
+
+def _reference_generate(params, prompt, max_new, cache_len):
+    """Scalar-position batch-1 greedy generation (the pre-serve path)."""
+    toks = jnp.asarray(prompt, jnp.int32)[None, :]
+    logits, state = prefill(params, CFG, {"tokens": toks},
+                            extra_capacity=cache_len - len(prompt))
+    out = [int(jnp.argmax(logits[0]))]
+    while len(out) < max_new:
+        logits, state = decode_step(
+            params, CFG, state, jnp.asarray([out[-1]], jnp.int32))
+        out.append(int(jnp.argmax(logits[0])))
+    return out
+
+
+def _drain(engine, reqs):
+    """Drive the engine clock-free: insert in order as slots free up."""
+    pending = list(reqs)
+    while pending or engine.active_count:
+        while pending and engine.has_free:
+            engine.insert(pending.pop(0))
+        engine.decode_round()
+
+
+# ---------------------------------------------------------------------------
+# buckets + request layer
+# ---------------------------------------------------------------------------
+
+def test_bucket_len():
+    assert bucket_len(3, 64, exact=False) == 8       # floor bucket
+    assert bucket_len(8, 64, exact=False) == 8
+    assert bucket_len(9, 64, exact=False) == 16
+    assert bucket_len(33, 64, exact=False) == 64
+    assert bucket_len(100, 64, exact=False) == 64    # clamp to capacity
+    assert bucket_len(13, 64, exact=True) == 13      # moe/ssm: no padding
+
+
+def test_synthetic_requests_deterministic():
+    a = synthetic_requests(4, vocab_size=64, prompt_len=8, prompt_jitter=3,
+                           arrival_gap_s=0.5, seed=11)
+    b = synthetic_requests(4, vocab_size=64, prompt_len=8, prompt_jitter=3,
+                           arrival_gap_s=0.5, seed=11)
+    assert [r.prompt for r in a] == [r.prompt for r in b]
+    assert [r.arrival_s for r in a] == [0.0, 0.5, 1.0, 1.5]
+    assert all(5 <= r.prompt_len <= 11 for r in a)
+
+
+def test_admission_policy_rejects():
+    pol = AdmissionPolicy(cache_len=16, max_queue=2)
+    q = RequestQueue(pol)
+    fits = Request(rid=0, prompt=[1] * 8, max_new_tokens=8)
+    too_big = Request(rid=1, prompt=[1] * 8, max_new_tokens=9)
+    assert q.push(fits) and not q.push(too_big)
+    assert too_big.finish_reason == "rejected"
+    assert q.rejected == [too_big]
+    assert q.push(Request(rid=2, prompt=[1] * 4, max_new_tokens=4))
+    overflow = Request(rid=3, prompt=[1] * 4, max_new_tokens=4)
+    assert not q.push(overflow)                      # max_queue=2 bound
+    assert overflow.finish_reason == "rejected"
+    assert len(q) == 2
+
+
+def test_queue_arrival_ordering():
+    q = RequestQueue()
+    for rid, t in [(0, 2.0), (1, 0.5), (2, 1.0)]:
+        q.push(Request(rid=rid, prompt=[1], max_new_tokens=1, arrival_s=t))
+    assert q.next_arrival_s() == 0.5
+    assert q.pop_ready(0.0) is None                  # nothing has arrived
+    assert q.pop_ready(1.5).rid == 1                 # earliest arrival first
+    assert q.pop_ready(1.5).rid == 2
+    assert q.pop_ready(1.5) is None                  # rid 0 arrives at 2.0
+    assert q.pop_ready(2.0).rid == 0
+
+
+# ---------------------------------------------------------------------------
+# decode-state helpers + slot lifecycle
+# ---------------------------------------------------------------------------
+
+def test_insert_evict_state_helpers():
+    params, cache_len = _params(), 32
+    big = init_decode_state(CFG, 3, cache_len, per_slot_pos=True)
+    assert big.pos.shape == (3,)
+    plen = 6
+    toks = jnp.asarray([[1, 2, 3, 4, 5, 6]], jnp.int32)
+    _, one = prefill(params, CFG, {"tokens": toks},
+                     extra_capacity=cache_len - plen)
+    big = insert_decode_state(big, one, 1)
+    assert int(big.pos[1]) == plen and int(big.pos[0]) == 0
+    got = jax.tree.map(lambda b: b[:, 1], big.caches)
+    want = jax.tree.map(lambda s: s[:, 0], one.caches)
+    for g, w in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+    big = evict_decode_state(big, 1)
+    assert int(big.pos[1]) == 0
+    assert all(not np.asarray(leaf[:, 1]).any()
+               for leaf in jax.tree.leaves(big.caches))
+
+
+def test_slot_insert_retire_reuse():
+    engine = SlotEngine(_params(), CFG, slots=2, cache_len=32)
+    r0 = Request(rid=0, prompt=[3, 4, 5], max_new_tokens=2)
+    r1 = Request(rid=1, prompt=[6, 7], max_new_tokens=4)
+    engine.insert(r0)
+    engine.insert(r1)
+    assert not engine.has_free and engine.active_count == 2
+    assert {r0.slot, r1.slot} == {0, 1}
+    finished = engine.decode_round()                 # r0 hits its budget
+    assert finished == [r0] and r0.finish_reason == "length"
+    assert len(r0.out_tokens) == 2
+    assert engine.has_free and engine.active_count == 1
+    r2 = Request(rid=2, prompt=[9, 10, 11, 12], max_new_tokens=2)
+    engine.insert(r2)
+    assert r2.slot == r0.slot                        # freed slot reused
+    while engine.active_count:
+        engine.decode_round()
+    assert r1.done and r2.done
+    assert len(r1.out_tokens) == 4 and len(r2.out_tokens) == 2
+
+
+def test_slot_engine_rejects_unservable():
+    sliding = dataclasses.replace(CFG, sliding_window=8)
+    with pytest.raises(NotImplementedError):
+        SlotEngine(_params(), sliding, slots=1, cache_len=16)
+    engine = SlotEngine(_params(), CFG, slots=1, cache_len=16)
+    with pytest.raises(ValueError):                  # can never fit the slot
+        engine.insert(Request(rid=0, prompt=[1] * 10, max_new_tokens=8))
+
+
+# ---------------------------------------------------------------------------
+# parity: continuous batching == static batch == scalar-pos reference
+# ---------------------------------------------------------------------------
+
+def test_continuous_matches_static_and_reference():
+    """Heterogeneous prompts through 2 slots (forcing reuse) produce the
+    same tokens as the static batch AND the plain scalar-position loop —
+    bucket padding, slot scatter, and vector positions are invisible."""
+    params, cache_len = _params(), 32
+    prompts = [[5, 9, 2], [7, 1, 1, 3, 8, 2, 4], [11, 13], [6] * 9,
+               [40, 41, 42, 43, 44]]
+    new = [4, 6, 3, 5, 4]
+    mk = lambda: [Request(rid=i, prompt=list(p), max_new_tokens=n)  # noqa: E731
+                  for i, (p, n) in enumerate(zip(prompts, new))]
+    cont = mk()
+    engine = SlotEngine(params, CFG, slots=2, cache_len=cache_len)
+    _drain(engine, cont)
+    assert len(engine._prefill_cache) <= 3           # buckets, not lengths
+    stat = static_generate(params, CFG, mk(), cache_len=cache_len)
+    for c, s, p, n in zip(cont, stat, prompts, new):
+        ref = _reference_generate(params, p, n, cache_len)
+        assert c.out_tokens == ref, (c.rid, c.out_tokens, ref)
+        assert s.out_tokens == ref, (s.rid, s.out_tokens, ref)
+
+
+# ---------------------------------------------------------------------------
+# scheduler: staggered admission, budget accounting, exact SLOs
+# ---------------------------------------------------------------------------
+
+class _StubSource:
+    def batch(self, i):
+        return i
+
+
+class _StubSession:
+    """Just enough AMBSession surface for the scheduler's train path."""
+
+    def __init__(self, params):
+        self.params = params
+        self.steps_done = 0
+
+    def batch_source(self):
+        return _StubSource()
+
+    def step(self, batch):
+        self.steps_done += 1
+        return {"loss": 1.0 / self.steps_done}
+
+
+def test_scheduler_staggered_admission():
+    reqs = synthetic_requests(5, vocab_size=CFG.vocab_size, prompt_len=6,
+                              prompt_jitter=2, max_new_tokens=3,
+                              arrival_gap_s=0.2, seed=2)
+    queue = RequestQueue(AdmissionPolicy(cache_len=32))
+    for r in reqs:
+        queue.push(r)
+    engine = SlotEngine(_params(), CFG, slots=2, cache_len=32)
+    clock = SyntheticClock(prefill_tok_s=0.001, decode_round_s=0.01)
+    report = ServeScheduler(engine, queue, round_budget_s=0.1,
+                            clock=clock).run()
+    assert report.summary["n_requests"] == 5
+    for r in reqs:
+        assert r.admit_s >= r.arrival_s              # never admit early
+        assert r.first_token_s == pytest.approx(
+            r.admit_s + 0.001 * r.prompt_len)        # TTFT = queue + prefill
+    admits = [r.admit_s for r in reqs]
+    assert admits == sorted(admits)                  # arrival order held
+
+
+def test_scheduler_budget_and_slo_exact():
+    """One request on a synthetic clock: every timestamp, SLO, and train
+    charge is exact budget arithmetic (8-token prefill at 0.01/tok, two
+    decode rounds at 0.1, then two 0.3 train epochs fill the 1.0 round)."""
+    stub = _StubSession(_params())
+    queue = RequestQueue(AdmissionPolicy(cache_len=32))
+    queue.push(Request(rid=0, prompt=[1] * 8, max_new_tokens=3))
+    engine = SlotEngine(stub.params, CFG, slots=2, cache_len=32)
+    clock = SyntheticClock(prefill_tok_s=0.01, decode_round_s=0.1,
+                           train_epoch_s=0.3)
+    sched = ServeScheduler(engine, queue, round_budget_s=1.0, clock=clock,
+                           session=stub, train_epochs=2)
+    report = sched.run()
+    req = report.requests[0]
+    assert req.first_token_s == pytest.approx(0.08)
+    assert req.finish_s == pytest.approx(0.28)       # + 2 decode rounds
+    s = report.summary
+    assert s["ttft_p50_s"] == pytest.approx(0.08)
+    assert s["tpot_p50_s"] == pytest.approx(0.1)     # (0.28-0.08)/(3-1)
+    assert s["latency_p99_s"] == pytest.approx(0.28)
+    assert s["tokens_per_s"] == pytest.approx(3 / 0.28)
+    # leftover budget absorbed exactly two epochs: 0.28+0.3+0.3 <= 1.0
+    assert report.train_epochs == 2 and stub.steps_done == 2
+    assert clock.now() == pytest.approx(0.88)
+    assert sched.metrics.train_losses == [1.0, 0.5]
+    # mandatory refresh: engine decodes the post-step params object
+    assert engine.params is stub.params
+
+
+def test_scheduler_train_backs_off_under_load():
+    """With a known epoch cost that never fits the leftover budget, zero
+    epochs run; relaxing the budget on the same workload absorbs them."""
+    def lane(budget, known_cost):
+        stub = _StubSession(_params())
+        queue = RequestQueue(AdmissionPolicy(cache_len=32))
+        for i in range(3):
+            queue.push(Request(rid=i, prompt=[2] * 8, max_new_tokens=3,
+                               arrival_s=0.1 * i))
+        engine = SlotEngine(stub.params, CFG, slots=1, cache_len=32)
+        sched = ServeScheduler(
+            engine, queue, round_budget_s=budget,
+            clock=SyntheticClock(prefill_tok_s=0.01, decode_round_s=0.1),
+            session=stub, train_epochs=4)
+        sched._train_cost = known_cost               # pre-learned estimate
+        return sched.run()
+
+    assert lane(0.3, known_cost=0.5).train_epochs == 0
+    assert lane(5.0, known_cost=0.5).train_epochs == 4
+
+
+def test_serve_static_barrier_costs():
+    """The static lane's TTFT includes the group barrier: the first
+    arrival waits for the last member of its group."""
+    reqs = [Request(rid=i, prompt=[3] * 4, max_new_tokens=2,
+                    arrival_s=0.5 * i) for i in range(4)]
+    clock = SyntheticClock(prefill_tok_s=0.01, decode_round_s=0.1)
+    report = serve_static(_params(), CFG, reqs, batch=4, cache_len=16,
+                          clock=clock)
+    assert report.summary["n_requests"] == 4
+    # group barriers on the last arrival (t=1.5) + 16 prefill tokens
+    assert reqs[0].first_token_s == pytest.approx(1.5 + 0.16)
+    assert reqs[0].first_token_s == reqs[3].first_token_s
+
+
+# ---------------------------------------------------------------------------
+# sampling
+# ---------------------------------------------------------------------------
+
+def test_sampling_controls():
+    key = jax.random.PRNGKey(0)
+    logits = jax.random.normal(jax.random.PRNGKey(1), (3, 64))
+    greedy = sample_token(logits)
+    np.testing.assert_array_equal(np.asarray(greedy),
+                                  np.argmax(np.asarray(logits), -1))
+    # top_k=1 at any temperature collapses to argmax
+    np.testing.assert_array_equal(
+        np.asarray(sample_token(logits, key, temperature=1.5, top_k=1)),
+        np.asarray(greedy))
+    with pytest.raises(ValueError):
+        sample_token(logits, temperature=0.7)        # stochastic needs key
+    # top-k restricts support to the k best ids per row
+    top5 = np.argsort(np.asarray(logits), -1)[:, -5:]
+    for i in range(20):
+        got = np.asarray(sample_token(logits, jax.random.fold_in(key, i),
+                                      temperature=1.0, top_k=5))
+        assert all(got[r] in top5[r] for r in range(3))
+    assert SamplingSpec().greedy and not SamplingSpec(temperature=0.7).greedy
+
+
+def test_sampling_seeded_determinism():
+    """Same SamplingSpec seed => the engine replays the same tokens."""
+    def run(seed):
+        engine = SlotEngine(
+            _params(), CFG, slots=2, cache_len=32,
+            sampling=SamplingSpec(temperature=0.9, top_k=8, seed=seed))
+        reqs = [Request(rid=i, prompt=[7, 8, 9 + i], max_new_tokens=6)
+                for i in range(3)]
+        _drain(engine, reqs)
+        return [r.out_tokens for r in reqs]
+
+    assert run(5) == run(5)
+    runs = {tuple(map(tuple, run(s))) for s in (5, 6, 7)}
+    assert len(runs) > 1                             # seed actually matters
+
+
+# ---------------------------------------------------------------------------
+# metrics plane
+# ---------------------------------------------------------------------------
+
+def test_serve_metrics_records_and_logger(tmp_path):
+    path = tmp_path / "serve.jsonl"
+    metrics = ServeMetrics(MetricsLogger(str(path)))
+    req = Request(rid=0, prompt=[1, 2], max_new_tokens=3, arrival_s=1.0,
+                  admit_s=1.5, first_token_s=2.0, finish_s=4.0,
+                  out_tokens=[3, 4, 5], finish_reason="length")
+    rec = metrics.complete(req)
+    assert rec["ttft_s"] == pytest.approx(1.0)
+    assert rec["tpot_s"] == pytest.approx(1.0)       # (4.0-2.0)/(3-1)
+    assert rec["queue_s"] == pytest.approx(0.5)
+    metrics.train_step(0, 2.5)
+    # per-write flush: both records are on disk before any close
+    lines = [json.loads(ln) for ln in path.read_text().splitlines()]
+    assert [ln["kind"] for ln in lines] == ["request", "train"]
+    s = metrics.summary()
+    assert s["n_requests"] == 1 and s["total_tokens"] == 3
+    assert s["span_s"] == pytest.approx(3.0)         # arrival -> finish
+    assert s["train_loss_last"] == 2.5
+    metrics.logger.close()
+    metrics.logger.close()                           # idempotent close
